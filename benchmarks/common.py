@@ -1,0 +1,60 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MACHConfig, MACHLinear, OAAClassifier
+from repro.data import ExtremeDataConfig, ExtremeDataset
+from repro.optim import adamw, apply_updates
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocking on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_linear(ds: ExtremeDataset, model, params, steps: int = 150,
+                 lr: float = 0.05, bs: int = 512):
+    opt = adamw(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, g = jax.value_and_grad(model.loss)(params, x, y)
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, loss
+
+    t0 = time.perf_counter()
+    for s in range(steps):
+        x, y = ds.batch_at(s, bs)
+        params, state, _ = step(params, state, x, y)
+    jax.block_until_ready(params)
+    return params, time.perf_counter() - t0
+
+
+def accuracy(ds: ExtremeDataset, predict_fn, steps: int = 4,
+             bs: int = 512) -> float:
+    accs = []
+    for s in range(steps):
+        x, y = ds.batch_at(2000 + s, bs, "test")
+        accs.append(float(jnp.mean(predict_fn(x) == y)))
+    return float(np.mean(accs))
+
+
+def make_dataset(num_classes: int = 1024, dim: int = 256,
+                 noise: float = 0.1) -> ExtremeDataset:
+    return ExtremeDataset(ExtremeDataConfig(num_classes=num_classes,
+                                            dim=dim, noise=noise,
+                                            zipf_a=0.0))

@@ -1,0 +1,111 @@
+"""Roofline aggregation: dry-run JSON artifacts -> §Roofline tables.
+
+Reads artifacts/dryrun/<mesh>/<arch>__<shape>.json (produced by
+launch/dryrun.py) and emits the per-(arch × shape) roofline table:
+compute / memory / collective terms in seconds, the dominant bottleneck,
+MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference), and the
+useful-FLOPs fraction.  Output: artifacts/roofline.md (+ CSV via the
+benchmark report hook).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str) -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x <= 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table_rows(mesh: str) -> list:
+    rows = []
+    cells = load_cells(mesh)
+    key = lambda c: (c["arch"], SHAPE_ORDER.index(c["shape"])
+                     if c["shape"] in SHAPE_ORDER else 9)
+    for c in sorted(cells, key=key):
+        if c.get("skipped"):
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "skipped": True, "reason": c["reason"]})
+            continue
+        d = c["data"]
+        r = d["roofline"]
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "skipped": False,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "model_flops": r["model_flops"],
+            "useful_frac": r["useful_flops_fraction"],
+            "fits": d["memory"]["fits_hbm"],
+            "peak_gb": (d["memory"]["per_device_argument_bytes"]
+                        + d["memory"]["per_device_temp_bytes"]) / 2**30,
+        })
+    return rows
+
+
+def to_markdown(mesh: str) -> str:
+    rows = table_rows(mesh)
+    out = [f"### Roofline — mesh {mesh}", "",
+           "| arch | shape | compute | memory | collective | bottleneck "
+           "| useful FLOPs frac | fits HBM |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["skipped"]:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — |")
+            continue
+        fits = "yes" if r["fits"] else f"NO ({r['peak_gb']:.1f}GiB)"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_frac']:.2f} | {fits} |")
+    return "\n".join(out)
+
+
+def run(report) -> None:
+    md_parts = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = table_rows(mesh)
+        done = [r for r in rows if not r["skipped"]]
+        skipped = [r for r in rows if r["skipped"]]
+        if not rows:
+            report(f"roofline/{mesh}", 0.0, "NO ARTIFACTS (run dryrun --all)")
+            continue
+        bcounts = {}
+        for r in done:
+            bcounts[r["bottleneck"]] = bcounts.get(r["bottleneck"], 0) + 1
+        fits = sum(1 for r in done if r["fits"])
+        report(f"roofline/{mesh}", 0.0,
+               f"cells={len(done)} skipped={len(skipped)} "
+               f"fits_hbm={fits}/{len(done)} bottlenecks={bcounts}")
+        for r in done:
+            report(f"roofline/{mesh}/{r['arch']}/{r['shape']}", 0.0,
+                   f"compute={fmt_s(r['compute_s'])} "
+                   f"memory={fmt_s(r['memory_s'])} "
+                   f"coll={fmt_s(r['collective_s'])} -> {r['bottleneck']} "
+                   f"useful={r['useful_frac']:.2f} fits={r['fits']}")
+        md_parts.append(to_markdown(mesh))
+    out_path = os.path.join(ART, "..", "roofline.md")
+    with open(out_path, "w") as f:
+        f.write("\n\n".join(md_parts) + "\n")
+    report("roofline/markdown", 0.0, f"written={os.path.abspath(out_path)}")

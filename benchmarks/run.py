@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
+
+  fig1_tradeoff     paper Figure 1  (accuracy vs B, R)
+  table2_resources  paper Table 2   (model size / time / accuracy)
+  table3_estimators paper Table 3   (unbiased / min / median)
+  bench_kernels     decode-cost claims (O(RBd+KR) vs O(Kd))
+  roofline          §Roofline aggregation from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def _report(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of benchmark module names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, fig1_tradeoff, roofline,
+                            table2_resources, table3_estimators)
+    modules = {
+        "table2_resources": table2_resources,
+        "table3_estimators": table3_estimators,
+        "bench_kernels": bench_kernels,
+        "roofline": roofline,
+        "fig1_tradeoff": fig1_tradeoff,
+    }
+    failed = []
+    for name, mod in modules.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            mod.run(_report)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            _report(f"{name}/FAILED", 0.0, repr(e))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""Quickstart: MACH in 60 seconds.
+
+Trains the paper's model — R independent B-way logistic regressions over
+hashed labels — on a synthetic extreme-classification task with a known
+Bayes optimum, then decodes with the unbiased estimator (Eq. 2) and
+compares against the one-vs-all baseline at several memory budgets.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MACHConfig, MACHLinear, OAAClassifier
+from repro.data import ExtremeDataConfig, ExtremeDataset
+from repro.optim import adamw, apply_updates
+
+K, D, STEPS, BS = 1024, 256, 150, 512
+
+
+def train(ds, model, params, lr=0.05):
+    opt = adamw(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, g = jax.value_and_grad(model.loss)(params, x, y)
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, loss
+
+    t0 = time.perf_counter()
+    for s in range(STEPS):
+        x, y = ds.batch_at(s, BS)
+        params, state, loss = step(params, state, x, y)
+    jax.block_until_ready(params)
+    return params, time.perf_counter() - t0
+
+
+def accuracy(ds, predict):
+    accs = []
+    for s in range(4):
+        x, y = ds.batch_at(5000 + s, BS, "test")
+        accs.append(float(jnp.mean(predict(x) == y)))
+    return sum(accs) / len(accs)
+
+
+def main():
+    ds = ExtremeDataset(ExtremeDataConfig(num_classes=K, dim=D, noise=0.1,
+                                          zipf_a=0.0))
+    print(f"task: K={K} classes, d={D}, Bayes accuracy ≈ "
+          f"{ds.bayes_accuracy(steps=2):.3f}\n")
+
+    oaa = OAAClassifier(K, D)
+    po, t = train(ds, oaa, oaa.init(jax.random.key(1)))
+    acc_o = accuracy(ds, lambda x: oaa.predict(po, x))
+    print(f"OAA baseline     params={oaa.param_count():>8,}  "
+          f"acc={acc_o:.3f}  ({t:.1f}s)")
+
+    for b, r in [(32, 4), (64, 4), (64, 8)]:
+        cfg = MACHConfig(K, b, r)
+        m = MACHLinear(cfg, D)
+        pm, t = train(ds, m, m.init(jax.random.key(0)))
+        acc = accuracy(ds, lambda x: m.predict(pm, x))
+        print(f"MACH B={b:3d} R={r}  params={m.param_count():>8,}  "
+              f"acc={acc:.3f}  ({t:.1f}s)  "
+              f"size_reduction={oaa.param_count()/m.param_count():.1f}x  "
+              f"P(indistinguishable pair)<= {cfg.indistinguishable_bound():.1e}")
+
+    print("\nAt full ODP scale (K=105,033, d=422,713) the same B=32, R=25 "
+          "configuration is a 131x model-size reduction (160 GB -> 1.2 GB).")
+
+
+if __name__ == "__main__":
+    main()

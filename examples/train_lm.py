@@ -1,0 +1,87 @@
+"""End-to-end driver: train a ~100M-parameter LM with a MACH head.
+
+A scaled tinyllama-family config (~100M params) trains for a few hundred
+steps on the synthetic token stream, with checkpointing + restart safety
+— the full production path (trainer, optimizer, data pipeline, fault
+tolerance) at laptop scale.  The MACH head replaces the full-softmax
+unembedding: with V=32,000 and B=512, R=8 the head is 7.8x smaller and
+the loss is the paper's R-head hashed cross-entropy.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.mach import MACHConfig
+from repro.data import LMDataConfig, SyntheticLMStream
+from repro.models import LanguageModel, ModelConfig
+from repro.train.fault_tolerance import StragglerMonitor
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def model_config(vocab: int, mach: bool) -> ModelConfig:
+    return ModelConfig(
+        name="lm100m", family="dense",
+        num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab_size=vocab,
+        activation="swiglu", norm="rmsnorm",
+        mach=MACHConfig(vocab, 512, 8) if mach else None,
+        dtype=jnp.float32, scan_layers=True, remat="none",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=32000)
+    ap.add_argument("--oaa", action="store_true",
+                    help="full-softmax baseline head instead of MACH")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_config(args.vocab, mach=not args.oaa)
+    model = LanguageModel(cfg)
+    n_params = cfg.param_count_estimate()
+    head = "MACH(B=512,R=8)" if cfg.mach else "full softmax"
+    print(f"model: {n_params/1e6:.0f}M params, head: {head}")
+    if cfg.mach:
+        full = cfg.d_model * cfg.vocab_size
+        machp = cfg.d_model * 512 * 8
+        print(f"head params: {machp/1e6:.1f}M vs {full/1e6:.1f}M "
+              f"({full/machp:.1f}x smaller)")
+
+    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=20,
+                       peak_lr=3e-4, checkpoint_every=100, log_every=20)
+    trainer = Trainer(model, tcfg)
+    stream = SyntheticLMStream(LMDataConfig(
+        vocab_size=args.vocab, seq_len=args.seq_len,
+        global_batch=args.batch))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    mon = StragglerMonitor()
+
+    # restart-safe: resume from the latest checkpoint if one exists
+    template = trainer.init_state(jax.random.key(0))
+    try:
+        state, step0 = mgr.restore(template)
+        print(f"resumed from checkpoint at step {step0}")
+    except FileNotFoundError:
+        state = template
+
+    t0 = time.perf_counter()
+    state = trainer.fit(state, stream, args.steps - int(state.step),
+                        manager=mgr, monitor=mon)
+    dt = time.perf_counter() - t0
+    tok_s = args.batch * args.seq_len * args.steps / max(dt, 1e-9)
+    print(f"\ndone: {dt:.0f}s  ({tok_s:,.0f} tok/s on CPU)  "
+          f"stragglers flagged: {len(mon.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Architecture registry: --arch <id> resolution."""
+
+from __future__ import annotations
+
+from repro.configs import (granite_20b, mistral_large_123b, mixtral_8x22b,
+                           paligemma_3b, phi3_mini_3_8b, qwen2_moe_a2_7b,
+                           recurrentgemma_2b, seamless_m4t_large_v2,
+                           tinyllama_1_1b, xlstm_350m)
+from repro.configs.common import SHAPES, shape_applicable, supports_long_context
+
+_MODULES = {
+    m.ARCH_ID: m
+    for m in (seamless_m4t_large_v2, mistral_large_123b, granite_20b,
+              tinyllama_1_1b, phi3_mini_3_8b, mixtral_8x22b,
+              qwen2_moe_a2_7b, paligemma_3b, recurrentgemma_2b, xlstm_350m)
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, *, smoke: bool = False, mach: str = "auto"):
+    try:
+        mod = _MODULES[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return mod.smoke_config() if smoke else mod.full_config(mach=mach)
+
+
+__all__ = ["ARCH_IDS", "get_config", "SHAPES", "shape_applicable",
+           "supports_long_context"]

@@ -1,0 +1,47 @@
+"""The paper's own task configs: ODP and fine-grained ImageNet.
+
+These are MACHLinear (logistic regression) setups, not LMs — Table 1/2
+of the paper.  The offline stand-in datasets are synthetic with a known
+Bayes optimum (data/extreme.py); the full-scale dimensions are kept here
+for the record and for the model-size arithmetic in benchmarks.
+"""
+
+import dataclasses
+
+from repro.core.mach import MACHConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtremeTaskConfig:
+    name: str
+    num_classes: int
+    dim: int
+    mach_b: int
+    mach_r: int
+    # reduced CPU-scale stand-in (same B; K, d, R scaled down)
+    small_classes: int
+    small_dim: int
+    small_r: int
+
+    def mach(self, small: bool = False) -> MACHConfig:
+        return MACHConfig(
+            num_classes=self.small_classes if small else self.num_classes,
+            num_buckets=self.mach_b,
+            num_repetitions=self.small_r if small else self.mach_r,
+            hash_kind="mult_shift" if (self.mach_b & (self.mach_b - 1)) == 0
+            else "carter_wegman")
+
+
+# Paper Table 2 run: ODP (B=32, R=25) — 125x model-size reduction
+ODP = ExtremeTaskConfig(
+    name="odp", num_classes=105033, dim=422713,
+    mach_b=32, mach_r=25,
+    small_classes=1024, small_dim=256, small_r=12,
+)
+
+# Paper Table 2 run: ImageNet-21k (B=512, R=20) — 2x reduction
+IMAGENET = ExtremeTaskConfig(
+    name="imagenet21k", num_classes=21841, dim=6144,
+    mach_b=512, mach_r=20,
+    small_classes=1024, small_dim=256, small_r=6,
+)

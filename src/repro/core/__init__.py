@@ -1,0 +1,37 @@
+"""MACH core: the paper's contribution as composable JAX modules."""
+
+from repro.core.hashing import (
+    CarterWegmanFamily,
+    MultShiftFamily,
+    indistinguishable_pair_bound,
+    make_hash_family,
+    memory_reduction,
+    r_required,
+)
+from repro.core.estimators import (
+    ESTIMATORS,
+    estimate_class_probs,
+    gather_class_probs,
+    median_estimator,
+    min_estimator,
+    predict_classes,
+    unbiased_estimator,
+)
+from repro.core.mach import (
+    MACHConfig,
+    MACHLinear,
+    MACHOutputHead,
+    mach_loss,
+    mach_meta_probs,
+)
+from repro.core.oaa import OAAClassifier
+
+__all__ = [
+    "CarterWegmanFamily", "MultShiftFamily", "make_hash_family",
+    "r_required", "indistinguishable_pair_bound", "memory_reduction",
+    "ESTIMATORS", "estimate_class_probs", "gather_class_probs",
+    "unbiased_estimator", "min_estimator", "median_estimator",
+    "predict_classes",
+    "MACHConfig", "MACHLinear", "MACHOutputHead", "mach_loss",
+    "mach_meta_probs", "OAAClassifier",
+]

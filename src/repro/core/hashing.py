@@ -1,0 +1,168 @@
+"""2-universal hashing for MACH (paper §2.1).
+
+Two constructions are provided:
+
+1. ``CarterWegmanFamily`` — h(x) = ((a·x + b) mod p) mod B with p the
+   Mersenne prime 2^61 − 1.  Exactly 2-universal [Carter & Wegman 1977].
+   Tables are materialized host-side with Python/numpy 64-bit integer
+   arithmetic (exact for K < 2^31) and shipped to device as an (R, K)
+   int32 array; on-device label hashing is a table gather (exact by
+   construction).  Works for arbitrary B.
+
+2. ``MultShiftFamily`` — the paper's "fastest way": sample a random odd
+   a ∈ [2^32], h(x) = (a·x mod 2^32) >> (32 − log2 B).  Requires B to be
+   a power of two; cheap enough to evaluate *inside* a Pallas kernel
+   (one uint32 multiply + shift), which removes the hash-table load from
+   the decode kernel's HBM traffic entirely.
+
+Both expose the same interface:
+  ``.table(K)``        → (R, K) int32 bucket ids
+  ``.hash_labels(y)``  → (R, *y.shape) bucket ids for a batch of labels
+
+Theory helpers implement Theorem 2 / Eq. 6 of the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+MERSENNE_P = (1 << 61) - 1  # prime > any realistic K
+
+
+def r_required(num_classes: int, num_buckets: int, delta: float = 1e-3) -> int:
+    """Theorem 2: smallest R s.t. all class pairs are distinguishable
+    with probability >= 1 - delta:  R = 2 log(K / sqrt(delta)) / log B.
+    """
+    if num_buckets < 2:
+        raise ValueError("need B >= 2")
+    r = 2.0 * math.log(num_classes / math.sqrt(delta)) / math.log(num_buckets)
+    return max(1, int(math.ceil(r)))
+
+
+def indistinguishable_pair_bound(num_classes: int, num_buckets: int,
+                                 num_repetitions: int) -> float:
+    """Union bound (Eq. 6): P(∃ indistinguishable pair) <= K^2 · B^-R."""
+    log_p = 2.0 * math.log(num_classes) - num_repetitions * math.log(num_buckets)
+    return min(1.0, math.exp(log_p))
+
+
+def memory_reduction(num_classes: int, num_buckets: int,
+                     num_repetitions: int) -> float:
+    """Model-size ratio O(Kd) / O(BRd) — the paper's headline number
+    (e.g. ODP B=32, R=25 → 105033/(32·25) ≈ 131x)."""
+    return num_classes / float(num_buckets * num_repetitions)
+
+
+@dataclasses.dataclass(frozen=True)
+class CarterWegmanFamily:
+    """R independent exactly-2-universal hash functions [K] -> [B]."""
+
+    num_buckets: int
+    num_repetitions: int
+    seed: int = 0
+
+    @property
+    def inline_kernel_ok(self) -> bool:
+        return False  # needs 61-bit arithmetic; use the table in kernels
+
+    def coeffs(self) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, 0xC33]))
+        a = rng.integers(1, MERSENNE_P, size=self.num_repetitions, dtype=np.uint64)
+        b = rng.integers(0, MERSENNE_P, size=self.num_repetitions, dtype=np.uint64)
+        return a, b
+
+    def table_np(self, num_classes: int) -> np.ndarray:
+        a, b = self.coeffs()
+        k = np.arange(num_classes, dtype=np.uint64)
+        rows = []
+        for j in range(self.num_repetitions):
+            aj, bj = int(a[j]), int(b[j])
+            # exact: split a into 30-bit limbs so products fit in uint64
+            a_lo, a_hi = aj & ((1 << 30) - 1), aj >> 30
+            lo = (a_lo * k) % MERSENNE_P
+            hi = (a_hi % MERSENNE_P) * (k % MERSENNE_P) % MERSENNE_P
+            hi = (hi * ((1 << 30) % MERSENNE_P)) % MERSENNE_P
+            h = (lo + hi + bj) % MERSENNE_P
+            rows.append((h % self.num_buckets).astype(np.int32))
+        return np.stack(rows, axis=0)
+
+    def table(self, num_classes: int) -> jnp.ndarray:
+        return jnp.asarray(self.table_np(num_classes), dtype=jnp.int32)
+
+    def hash_labels(self, labels: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+        """(...,) int labels -> (R, ...) bucket ids via exact table gather."""
+        tab = self.table(num_classes)  # (R, K)
+        return jnp.take(tab, labels, axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultShiftFamily:
+    """Multiply-shift hashing (paper §2.1 'fastest way'); B must be 2^k.
+
+    h_j(x) = (a_j * x mod 2^32) >> (32 - log2 B), a_j random odd uint32.
+    Evaluable with one integer multiply + shift — including inside a
+    Pallas kernel, so the decode kernel never touches a hash table.
+    """
+
+    num_buckets: int
+    num_repetitions: int
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_buckets & (self.num_buckets - 1):
+            raise ValueError("MultShiftFamily requires power-of-two B")
+        if self.num_buckets < 2:
+            raise ValueError("need B >= 2")
+
+    @property
+    def inline_kernel_ok(self) -> bool:
+        return True
+
+    @property
+    def shift(self) -> int:
+        return 32 - int(math.log2(self.num_buckets))
+
+    def coeffs(self) -> np.ndarray:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, 0x5F7]))
+        a = rng.integers(0, 1 << 31, size=self.num_repetitions,
+                         dtype=np.uint32).astype(np.uint32) * np.uint32(2) + np.uint32(1)
+        return a
+
+    def table_np(self, num_classes: int) -> np.ndarray:
+        a = self.coeffs().astype(np.uint64)
+        k = np.arange(num_classes, dtype=np.uint64)
+        prod = (a[:, None] * k[None, :]) & np.uint64(0xFFFFFFFF)
+        return (prod >> np.uint64(self.shift)).astype(np.int32)
+
+    def table(self, num_classes: int) -> jnp.ndarray:
+        return jnp.asarray(self.table_np(num_classes), dtype=jnp.int32)
+
+    def hash_labels(self, labels: jnp.ndarray, num_classes: int = 0) -> jnp.ndarray:
+        """On-the-fly device hashing: (...,) -> (R, ...)."""
+        a = jnp.asarray(self.coeffs())  # uint32
+        y = labels.astype(jnp.uint32)
+        prod = a.reshape((-1,) + (1,) * y.ndim) * y[None]  # wraps mod 2^32
+        return jax.lax.shift_right_logical(
+            prod, jnp.uint32(self.shift)).astype(jnp.int32)
+
+
+# late import to keep module import cheap and avoid cycle
+import jax  # noqa: E402
+
+
+def make_hash_family(num_buckets: int, num_repetitions: int, seed: int = 0,
+                     kind: str = "auto"):
+    """kind: 'auto' (mult_shift when B=2^k else carter_wegman) |
+    'carter_wegman' | 'mult_shift'."""
+    if kind == "auto":
+        kind = ("mult_shift"
+                if num_buckets & (num_buckets - 1) == 0 else "carter_wegman")
+    if kind == "mult_shift":
+        return MultShiftFamily(num_buckets, num_repetitions, seed)
+    if kind == "carter_wegman":
+        return CarterWegmanFamily(num_buckets, num_repetitions, seed)
+    raise ValueError(f"unknown hash family kind: {kind}")

@@ -1,0 +1,236 @@
+"""MACH — Merged-Averaged Classifiers via Hashing (the paper's algorithm).
+
+Three integration levels, lowest to highest:
+
+* ``mach_loss``        — loss-level: R-head cross-entropy on hashed labels
+                         (Algorithm 1's trainLogistic target transform).
+* ``MACHLinear``       — the paper-faithful model: R independent B-way
+                         *logistic regressions* over raw features, trained
+                         jointly or per-repetition (embarrassingly parallel).
+* ``MACHOutputHead``   — the framework feature: drop-in replacement for an
+                         LM's d×V softmax head, producing (…, R, B) logits
+                         with O(d·R·B) = O(d log K) parameters.
+
+Prediction (Algorithm 2) lives in ``estimators.py`` (reference) and
+``kernels/mach_decode.py`` (fused TPU path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators as est
+from repro.core import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class MACHConfig:
+    """Static configuration of a MACH classifier/head.
+
+    B and R are the paper's two knobs (memory BRd, inference RBd + KR).
+    """
+
+    num_classes: int            # K
+    num_buckets: int            # B
+    num_repetitions: int        # R
+    seed: int = 0
+    estimator: str = "unbiased"         # unbiased | min | median
+    hash_kind: str = "auto"             # auto | carter_wegman | mult_shift
+
+    def __post_init__(self):
+        if self.num_buckets < 2:
+            raise ValueError("B must be >= 2")
+        if self.num_repetitions < 1:
+            raise ValueError("R must be >= 1")
+        if self.estimator not in est.ESTIMATORS:
+            raise ValueError(f"estimator {self.estimator!r} not in {est.ESTIMATORS}")
+
+    @property
+    def family(self):
+        return hashing.make_hash_family(
+            self.num_buckets, self.num_repetitions, self.seed, self.hash_kind)
+
+    def table(self) -> jnp.ndarray:
+        return self.family.table(self.num_classes)
+
+    def table_np(self) -> np.ndarray:
+        return self.family.table_np(self.num_classes)
+
+    def hash_labels(self, labels: jnp.ndarray) -> jnp.ndarray:
+        """(...,) class ids -> (R, ...) bucket ids."""
+        return self.family.hash_labels(labels, self.num_classes)
+
+    # --- theory (paper §3.1) ---
+    def indistinguishable_bound(self) -> float:
+        return hashing.indistinguishable_pair_bound(
+            self.num_classes, self.num_buckets, self.num_repetitions)
+
+    def memory_reduction(self) -> float:
+        return hashing.memory_reduction(
+            self.num_classes, self.num_buckets, self.num_repetitions)
+
+    @staticmethod
+    def from_delta(num_classes: int, num_buckets: int, delta: float = 1e-3,
+                   **kw) -> "MACHConfig":
+        """Build a config with R chosen by Theorem 2."""
+        r = hashing.r_required(num_classes, num_buckets, delta)
+        return MACHConfig(num_classes, num_buckets, r, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Loss (training): R independent B-way cross entropies on hashed labels.
+# ---------------------------------------------------------------------------
+
+def mach_loss(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
+              weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean (over batch) of the summed R-head cross-entropy.
+
+    logits:        (..., R, B)
+    hashed_labels: (R, ...)  bucket ids — note leading R (hash-family layout)
+    weights:       (...,) optional 0/1 mask (e.g. padding tokens)
+
+    Each head j is its own B-way classifier on dataset D_j = {x, h_j(y)}
+    (Algorithm 1); the joint loss is the sum over heads, which is exactly
+    training the R models independently when the trunk is fixed — and
+    shares the trunk forward pass when it is not.
+    """
+    r, b = logits.shape[-2], logits.shape[-1]
+    if hashed_labels.shape[0] != r:
+        raise ValueError(f"R mismatch: logits {logits.shape}, labels "
+                         f"{hashed_labels.shape}")
+    # (..., R, B) log-softmax over B per head
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    # move labels R-axis last to align with logits' (..., R)
+    lbl = jnp.moveaxis(hashed_labels, 0, -1)          # (..., R)
+    picked = jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]  # (..., R)
+    nll = -jnp.sum(picked, axis=-1)                   # (...,) summed over heads
+    if weights is not None:
+        return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.mean(nll)
+
+
+def mach_meta_probs(logits: jnp.ndarray) -> jnp.ndarray:
+    """(..., R, B) logits -> (R, ..., B) per-head probabilities P^j."""
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.moveaxis(p, -2, 0)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful model: R independent logistic regressions.
+# ---------------------------------------------------------------------------
+
+class MACHLinear:
+    """R B-way logistic regressions on d features — the paper's §4 model.
+
+    Parameters: W (d, R, B), b (R, B) — total d·R·B + R·B, i.e. the
+    paper's BRd model size versus OAA's Kd.
+    """
+
+    def __init__(self, cfg: MACHConfig, dim: int):
+        self.cfg = cfg
+        self.dim = dim
+
+    def init(self, key: jax.Array) -> dict:
+        wkey, _ = jax.random.split(key)
+        scale = 1.0 / math.sqrt(self.dim)
+        return {
+            "w": jax.random.normal(wkey, (self.dim, self.cfg.num_repetitions,
+                                          self.cfg.num_buckets), jnp.float32) * scale,
+            "b": jnp.zeros((self.cfg.num_repetitions, self.cfg.num_buckets),
+                           jnp.float32),
+        }
+
+    def logits(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        """(n, d) -> (n, R, B)."""
+        return jnp.einsum("nd,drb->nrb", x, params["w"]) + params["b"]
+
+    def loss(self, params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return mach_loss(self.logits(params, x), self.cfg.hash_labels(y))
+
+    def meta_probs(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        """getProbability of Algorithm 2: (R, n, B)."""
+        return mach_meta_probs(self.logits(params, x))
+
+    def predict(self, params: dict, x: jnp.ndarray,
+                estimator: Optional[str] = None) -> jnp.ndarray:
+        table = self.cfg.table()
+        return est.predict_classes(self.meta_probs(params, x), table,
+                                   estimator or self.cfg.estimator)
+
+    def class_probs(self, params: dict, x: jnp.ndarray,
+                    estimator: Optional[str] = None) -> jnp.ndarray:
+        table = self.cfg.table()
+        return est.estimate_class_probs(self.meta_probs(params, x), table,
+                                        estimator or self.cfg.estimator)
+
+    def param_count(self) -> int:
+        c = self.cfg
+        return self.dim * c.num_repetitions * c.num_buckets \
+            + c.num_repetitions * c.num_buckets
+
+    # --- embarrassing parallelism (paper §6.1): per-repetition slices ---
+    @staticmethod
+    def slice_repetition(params: dict, j: int) -> dict:
+        """Extract repetition j's independent model (train anywhere)."""
+        return {"w": params["w"][:, j], "b": params["b"][j]}
+
+    @staticmethod
+    def merge_repetitions(slices: list[dict]) -> dict:
+        """Inverse of slice_repetition — merge R separately-trained models."""
+        return {
+            "w": jnp.stack([s["w"] for s in slices], axis=1),
+            "b": jnp.stack([s["b"] for s in slices], axis=0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# LM integration: MACH output head replacing the d×V softmax.
+# ---------------------------------------------------------------------------
+
+class MACHOutputHead:
+    """Drop-in replacement for an LM's unembedding: d -> (R, B) logits.
+
+    The kernel is stored as (d, R*B) so the forward pass is a single
+    MXU-friendly matmul; logits are reshaped to (..., R, B) for the loss.
+    Sharding: logical axes ("embed", "mach_rb") — the R·B axis shards
+    over the model axis exactly like a vocab-sharded softmax, at
+    V/(R·B)× less collective volume.
+    """
+
+    def __init__(self, cfg: MACHConfig, dim: int, dtype=jnp.float32):
+        self.cfg = cfg
+        self.dim = dim
+        self.dtype = dtype
+
+    @property
+    def out_features(self) -> int:
+        return self.cfg.num_repetitions * self.cfg.num_buckets
+
+    def init(self, key: jax.Array) -> dict:
+        scale = 1.0 / math.sqrt(self.dim)
+        return {"kernel": (jax.random.normal(key, (self.dim, self.out_features),
+                                             jnp.float32) * scale).astype(self.dtype)}
+
+    def apply(self, params: dict, h: jnp.ndarray) -> jnp.ndarray:
+        """(..., d) hidden states -> (..., R, B) logits."""
+        out = h @ params["kernel"].astype(h.dtype)
+        return out.reshape(out.shape[:-1] + (self.cfg.num_repetitions,
+                                             self.cfg.num_buckets))
+
+    def loss(self, params: dict, h: jnp.ndarray, labels: jnp.ndarray,
+             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        return mach_loss(self.apply(params, h), self.cfg.hash_labels(labels),
+                         weights)
+
+    def param_count(self) -> int:
+        return self.dim * self.out_features
+
+    def full_softmax_param_count(self) -> int:
+        return self.dim * self.cfg.num_classes

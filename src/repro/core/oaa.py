@@ -1,0 +1,52 @@
+"""One-vs-all (OAA) baseline — the paper's primary comparison point.
+
+A plain K-way softmax (logistic) classifier with O(Kd) parameters and
+O(Kd) inference multiplications.  Implemented so every MACH experiment
+can report the paper's accuracy/memory tradeoff against the exact
+baseline it compares to (paper §4.2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OAAClassifier:
+    """Standard softmax regression: W (d, K), b (K)."""
+
+    def __init__(self, num_classes: int, dim: int):
+        self.num_classes = num_classes
+        self.dim = dim
+
+    def init(self, key: jax.Array) -> dict:
+        scale = 1.0 / math.sqrt(self.dim)
+        return {
+            "w": jax.random.normal(key, (self.dim, self.num_classes),
+                                   jnp.float32) * scale,
+            "b": jnp.zeros((self.num_classes,), jnp.float32),
+        }
+
+    def logits(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        return x @ params["w"] + params["b"]
+
+    def loss(self, params: dict, x: jnp.ndarray, y: jnp.ndarray,
+             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        lg = self.logits(params, x)
+        logp = lg - jax.nn.logsumexp(lg, axis=-1, keepdims=True)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        if weights is not None:
+            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+        return jnp.mean(nll)
+
+    def predict(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.argmax(self.logits(params, x), axis=-1)
+
+    def class_probs(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.nn.softmax(self.logits(params, x), axis=-1)
+
+    def param_count(self) -> int:
+        return self.dim * self.num_classes + self.num_classes

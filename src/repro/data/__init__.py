@@ -1,0 +1,5 @@
+from repro.data.lm import LMDataConfig, SyntheticLMStream
+from repro.data.extreme import ExtremeDataConfig, ExtremeDataset
+
+__all__ = ["LMDataConfig", "SyntheticLMStream",
+           "ExtremeDataConfig", "ExtremeDataset"]

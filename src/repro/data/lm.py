@@ -1,0 +1,84 @@
+"""Deterministic synthetic LM data pipeline.
+
+Restart-safe by construction: batch at step s is a pure function of
+(seed, step) — a restarted job resumes at step s and sees *exactly* the
+remaining stream, never replaying or skipping data.  This is the
+fault-tolerance property real pipelines get from checkpointing iterator
+state; we get it for free from counter-based PRNG.
+
+Token statistics follow a Zipf distribution with a planted bigram
+structure so the LM loss actually *decreases* during example training
+(pure uniform noise has no learnable signal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    # planted structure: token t is followed by (t*mult + off) % V w.p. p
+    bigram_p: float = 0.5
+    # modality stubs
+    enc_feats_dim: int = 0          # >0 -> emit enc_feats (audio enc-dec)
+    enc_len: int = 0
+    prefix_feats_dim: int = 0       # >0 -> emit prefix_feats (vision)
+    prefix_len: int = 0
+
+
+class SyntheticLMStream:
+    """Stateless stream: ``batch_at(step)`` for any step, plus iterator
+    sugar.  Per-host sharding: pass (host_index, host_count) to carve a
+    disjoint slice of the global batch."""
+
+    def __init__(self, cfg: LMDataConfig, host_index: int = 0,
+                 host_count: int = 1):
+        assert cfg.global_batch % host_count == 0
+        self.cfg = cfg
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = cfg.global_batch // host_count
+        # zipf weights (host-side, once)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        w = ranks ** (-cfg.zipf_a)
+        self._probs = jnp.asarray(w / w.sum(), jnp.float32)
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(cfg.seed), step),
+            self.host_index)
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        b, l = self.local_batch, cfg.seq_len
+        base = jax.random.choice(k1, cfg.vocab_size, (b, l + 1),
+                                 p=self._probs)
+        # plant bigram structure: with prob p, token[i+1] = f(token[i])
+        follow = (base[:, :-1] * 31 + 7) % cfg.vocab_size
+        use = jax.random.bernoulli(k2, cfg.bigram_p, follow.shape)
+        tokens = jnp.concatenate(
+            [base[:, :1], jnp.where(use, follow, base[:, 1:])], axis=1)
+        batch = {"tokens": tokens.astype(jnp.int32)}
+        if cfg.enc_feats_dim:
+            batch["enc_feats"] = jax.random.normal(
+                k3, (b, cfg.enc_len, cfg.enc_feats_dim), jnp.float32)
+        if cfg.prefix_feats_dim:
+            batch["prefix_feats"] = jax.random.normal(
+                k4, (b, cfg.prefix_len, cfg.prefix_feats_dim), jnp.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,120 @@
+"""Fused flash attention kernel (TPU target; the §Perf memory-term fix).
+
+The dry-run roofline shows every train/prefill cell memory-bound on
+attention-score traffic: the jnp flash implementation materializes each
+(cq × ck) f32 score chunk to HBM between XLA fusions — O(T·S·H) bytes
+per layer.  This kernel keeps the online-softmax state (m, l, acc) and
+the score tile entirely in VMEM: HBM traffic drops to the information
+minimum O(q + k + v + out), shifting those cells toward the compute
+roofline (see EXPERIMENTS.md §Perf for the before/after).
+
+Supports causal masking, sliding windows, and GQA (kv-head block mapped
+as qh // group).  Layout: q (BH, T, hd); k/v (BKV, S, hd).
+
+Validated against models/attention.py's jnp paths with interpret=True
+(tests/test_kernels.py::test_flash_attention_*).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_body(bq, bk, hd, scale, causal, window, q_ref, k_ref, v_ref,
+                o_ref, m_scr, l_scr, acc_scr):
+    """q_ref: (1, bq, hd); k/v_ref: (1, bk, hd); o_ref: (1, bq, hd)."""
+    kblk = pl.program_id(2)
+    nk = pl.num_programs(2)
+    qblk = pl.program_id(1)
+
+    @pl.when(kblk == 0)
+    def _init():
+        m_scr[...] = jnp.full((bq, 1), NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros((bq, 1), jnp.float32)
+        acc_scr[...] = jnp.zeros((bq, hd), jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale                 # (bq, hd)
+    k = k_ref[0]                                             # (bk, hd)
+    s = jax.lax.dot_general(q.astype(k.dtype), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    rows = qblk * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = kblk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= cols > rows - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # rows with no valid cols yet keep m = -inf; guard the exp
+    corr = jnp.where(m_prev > NEG_INF / 2,
+                     jnp.exp(m_prev - m_new), 0.0)
+    e = jnp.where(ok, jnp.exp(s - m_new), 0.0)               # (bq, bk)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(e, axis=-1, keepdims=True)
+    v = v_ref[0]
+    pv = jax.lax.dot_general(e.astype(v.dtype), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+
+    @pl.when(kblk == nk - 1)
+    def _flush():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-37)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, T, H, hd); k/v: (B, S, KV, hd) -> (B, T, H, hd).
+
+    Assumes contiguous positions 0..T-1 / 0..S-1 with T aligned to the
+    *end* of S (self-attention train/prefill case: T == S).
+    """
+    b, t, h, hd = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(block_q, t)
+    bk = min(block_k, s_len)
+    assert t % bq == 0 and s_len % bk == 0, (t, bq, s_len, bk)
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s_len, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s_len, hd)
+
+    grid = (b * h, t // bq, s_len // bk)
+    out = pl.pallas_call(
+        functools.partial(_flash_body, bq, bk, hd, scale, causal, window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, i, j, g=g: (bh // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, i, j, g=g: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, hd).transpose(0, 2, 1, 3)

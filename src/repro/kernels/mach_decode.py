@@ -1,0 +1,196 @@
+"""Fused MACH decode kernel (Algorithm 2 on the MXU).
+
+The paper computes the global score matrix ``G[n, k] = Σ_r P_r[n, h_r(k)]``
+with an OpenCL gather kernel, materializes G (N×K), then argmaxes.  On
+TPU random gathers are VPU-bound, so we recast decode as a blocked
+matmul against a multi-hot matrix that is *built on the fly in VMEM*:
+
+    G_tile = P_tile (bn, R·B)  @  M_tile (R·B, bk)
+    M[(r·B + b), k] = 1[h_r(k) = b]
+
+and we keep a *running* top-1 (value, index) accumulator in VMEM scratch
+across K blocks — the N×K score matrix never exists in HBM.  HBM traffic
+drops from O(N·K) to O(N·R·B + N) and the contraction (depth R·B) runs
+on the MXU.
+
+Two hash sources:
+  * table mode   — the (R, K) int32 bucket table is tiled in (works for
+                   any 2-universal family),
+  * inline mode  — multiply-shift hashes are computed in-register from
+                   the class index (paper §2.1's trick), removing the
+                   table load from HBM entirely.  Requires B = 2^k.
+
+Grid: (N/bn, K/bk), K minor (innermost) so the scratch accumulator for a
+fixed N block sees all K blocks in order; the P tile's index map is
+K-invariant so Pallas keeps it resident in VMEM across the K sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
+                 val_out, idx_out):
+    """Shared running-top-1 logic.  scores: (bn, bk) f32."""
+    @pl.when(kblk == 0)
+    def _init():
+        run_val[...] = jnp.full((bn, 1), NEG_INF, jnp.float32)
+        run_idx[...] = jnp.zeros((bn, 1), jnp.int32)
+
+    blk_val = jnp.max(scores, axis=-1, keepdims=True)                 # (bn, 1)
+    blk_idx = jnp.argmax(scores, axis=-1, keepdims=True).astype(jnp.int32)
+    # strict > keeps the first global argmax (jnp.argmax tie-breaking)
+    better = blk_val > run_val[...]
+    run_val[...] = jnp.where(better, blk_val, run_val[...])
+    run_idx[...] = jnp.where(better, kbase + blk_idx, run_idx[...])
+
+    @pl.when(kblk == nk - 1)
+    def _flush():
+        val_out[...] = run_val[...]
+        idx_out[...] = run_idx[...]
+
+
+def _decode_body_table(num_classes, bn, bk, r, b,
+                       probs_ref, table_ref, val_out, idx_out,
+                       run_val, run_idx):
+    """Table mode.  probs_ref: (bn, R*B) VMEM;  table_ref: (R, bk) int32."""
+    kblk = pl.program_id(1)
+    nk = pl.num_programs(1)
+    kbase = kblk * bk
+
+    # Multi-hot M (R, B, bk): M[r, b, k] = 1[table[r, k] == b]; flattened
+    # r-major to (R·B, bk) so one MXU matmul covers all R repetitions.
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (r, b, bk), 1)
+    m = (iota_b == table_ref[...][:, None, :]).astype(jnp.float32)
+    scores = jnp.dot(probs_ref[...].astype(jnp.float32),
+                     m.reshape(r * b, bk),
+                     preferred_element_type=jnp.float32)              # (bn, bk)
+
+    # Mask the K padding tail (global class id >= K).
+    gidx = kbase + jax.lax.broadcasted_iota(jnp.int32, (bn, bk), 1)
+    scores = jnp.where(gidx < num_classes, scores, NEG_INF)
+    _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
+                 val_out, idx_out)
+
+
+def _decode_body_inline(num_classes, bn, bk, r, b, shift,
+                        probs_ref, coeff_ref, val_out, idx_out,
+                        run_val, run_idx):
+    """Inline multiply-shift mode — no hash table in HBM.
+
+    coeff_ref: (R, 1) uint32 VMEM; bucket = (a_r · k mod 2^32) >> shift.
+    """
+    kblk = pl.program_id(1)
+    nk = pl.num_programs(1)
+    kbase = kblk * bk
+
+    kk = (kbase + jax.lax.broadcasted_iota(jnp.int32, (r, bk), 1)
+          ).astype(jnp.uint32)
+    a = coeff_ref[...]                                                # (R, 1)
+    buckets = jax.lax.shift_right_logical(a * kk, jnp.uint32(shift)
+                                          ).astype(jnp.int32)         # (R, bk)
+
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (r, b, bk), 1)
+    m = (iota_b == buckets[:, None, :]).astype(jnp.float32)
+    scores = jnp.dot(probs_ref[...].astype(jnp.float32),
+                     m.reshape(r * b, bk),
+                     preferred_element_type=jnp.float32)
+
+    gidx = kbase + jax.lax.broadcasted_iota(jnp.int32, (bn, bk), 1)
+    scores = jnp.where(gidx < num_classes, scores, NEG_INF)
+    _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
+                 val_out, idx_out)
+
+
+def choose_decode_blocks(n: int, rb: int,
+                         block_n: Optional[int] = None,
+                         block_k: Optional[int] = None,
+                         vmem_budget: int = 6 * 2**20) -> tuple[int, int]:
+    """Pick (bn, bk): P tile (bn·RB·4 B) + M tile (RB·bk·4 B) within budget,
+    bk a multiple of 128 (lane width) for MXU alignment."""
+    bn = block_n or min(128, max(8, n))
+    if block_k is None:
+        bk = (vmem_budget // (4 * rb)) // 128 * 128
+        bk = int(min(max(bk, 128), 2048))
+    else:
+        bk = block_k
+    return bn, bk
+
+
+def mach_decode_pallas(meta_probs: jnp.ndarray,
+                       table: Optional[jnp.ndarray] = None,
+                       *,
+                       num_classes: int,
+                       inline_coeffs: Optional[jnp.ndarray] = None,
+                       inline_shift: Optional[int] = None,
+                       block_n: Optional[int] = None,
+                       block_k: Optional[int] = None,
+                       interpret: bool = False
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused top-1 decode.  meta_probs (N, R, B) -> (val (N,), idx (N,)).
+
+    Exactly one of ``table`` ((R, K) int32) or
+    (``inline_coeffs`` ((R,) uint32), ``inline_shift``) must be given.
+    """
+    n, r, b = meta_probs.shape
+    rb = r * b
+    bn, bk = choose_decode_blocks(n, rb, block_n, block_k)
+    n_pad = -n % bn
+    k_grid = pl.cdiv(num_classes, bk)
+
+    probs2d = meta_probs.reshape(n, rb)
+    if n_pad:
+        probs2d = jnp.pad(probs2d, ((0, n_pad), (0, 0)))
+    npad = n + n_pad
+
+    grid = (npad // bn, k_grid)
+    out_shape = (jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+                 jax.ShapeDtypeStruct((npad, 1), jnp.int32))
+    scratch = [pltpu.VMEM((bn, 1), jnp.float32),
+               pltpu.VMEM((bn, 1), jnp.int32)]
+    out_specs = (pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+                 pl.BlockSpec((bn, 1), lambda i, j: (i, 0)))
+    probs_spec = pl.BlockSpec((bn, rb), lambda i, j: (i, 0))
+
+    if table is not None:
+        k_pad = k_grid * bk - num_classes
+        tab = jnp.pad(table, ((0, 0), (0, k_pad)), constant_values=b)
+        body = functools.partial(_decode_body_table, num_classes, bn, bk, r, b)
+        val, idx = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[probs_spec,
+                      pl.BlockSpec((r, bk), lambda i, j: (0, j))],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(probs2d, tab)
+    else:
+        if inline_coeffs is None or inline_shift is None:
+            raise ValueError("need table or (inline_coeffs, inline_shift)")
+        if b & (b - 1):
+            raise ValueError("inline mode requires power-of-two B")
+        body = functools.partial(_decode_body_inline, num_classes, bn, bk,
+                                 r, b, inline_shift)
+        val, idx = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[probs_spec,
+                      pl.BlockSpec((r, 1), lambda i, j: (0, 0))],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(probs2d, inline_coeffs.reshape(r, 1))
+
+    return val[:n, 0], idx[:n, 0]

@@ -1,0 +1,140 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas kernels run natively; elsewhere
+(this CPU container) they run with ``interpret=True`` when
+``use_pallas=True`` is forced (tests) and otherwise fall back to the
+pure-jnp reference, which is semantically identical.  Call sites never
+branch on platform themselves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mach_decode import mach_decode_pallas
+from repro.kernels.mach_xent import mach_xent_pallas
+from repro.kernels.lru_scan import lru_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# MACH decode
+# ---------------------------------------------------------------------------
+
+def mach_top1(meta_probs: jnp.ndarray,
+              table: Optional[jnp.ndarray] = None,
+              *,
+              num_classes: int,
+              inline_coeffs: Optional[jnp.ndarray] = None,
+              inline_shift: Optional[int] = None,
+              use_pallas: Optional[bool] = None,
+              interpret: Optional[bool] = None
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-1 class under the summed-score rule (≡ unbiased-estimator argmax).
+
+    meta_probs: (..., R, B) — leading dims flattened internally.
+    Returns (values (...,) f32, indices (...,) int32).
+    """
+    lead = meta_probs.shape[:-2]
+    r, b = meta_probs.shape[-2:]
+    flat = meta_probs.reshape((-1, r, b))
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        val, idx = mach_decode_pallas(
+            flat, table, num_classes=num_classes,
+            inline_coeffs=inline_coeffs, inline_shift=inline_shift,
+            interpret=interp)
+    else:
+        if table is None:
+            # rebuild table from inline coefficients (reference path)
+            k = jnp.arange(num_classes, dtype=jnp.uint32)
+            prod = inline_coeffs[:, None] * k[None, :]
+            table = jax.lax.shift_right_logical(
+                prod, jnp.uint32(inline_shift)).astype(jnp.int32)
+        # gather-based scores (O(N·K·R) bytes) — the right CPU algorithm;
+        # the one-hot-matmul form (ref.mach_decode_ref, the TPU kernel's
+        # oracle) builds an O(K·R·B) one-hot regardless of N
+        meta = jnp.moveaxis(flat.astype(jnp.float32), 1, 0)   # (R, N, B)
+        g = jnp.take_along_axis(
+            meta, table[:, None, :].astype(jnp.int32), axis=-1)  # (R, N, K)
+        scores = jnp.sum(g, axis=0)
+        idx = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+        val = jnp.max(scores, axis=-1)
+    return val.reshape(lead), idx.reshape(lead)
+
+
+def mach_scores(meta_probs: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Full (…, K) score matrix — reference path (used by sampling/top-k)."""
+    lead = meta_probs.shape[:-2]
+    r, b = meta_probs.shape[-2:]
+    g = ref.mach_scores_ref(meta_probs.reshape((-1, r, b)), table)
+    return g.reshape(lead + (table.shape[1],))
+
+
+# ---------------------------------------------------------------------------
+# MACH fused cross entropy
+# ---------------------------------------------------------------------------
+
+def mach_xent(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
+              *, use_pallas: Optional[bool] = None,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-example summed R-head CE with fused fwd/bwd.
+
+    logits: (..., R, B); hashed_labels: (..., R) -> (...,) f32.
+    """
+    lead = logits.shape[:-2]
+    r, b = logits.shape[-2:]
+    lg = logits.reshape((-1, r, b))
+    lbl = hashed_labels.reshape((-1, r))
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        out = mach_xent_pallas(lg, lbl, None, interp)
+    else:
+        out = ref.mach_xent_ref(lg, lbl)
+    return out.reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+def lru_scan(a: jnp.ndarray, x: jnp.ndarray, h0: jnp.ndarray,
+             *, use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Diagonal linear recurrence h_t = a_t·h_{t-1} + x_t;  (B, T, D)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return lru_scan_pallas(a, x, h0, interpret=interp)
+    return ref.lru_scan_ref(a, x, h0)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (fused softmax attention — the §Perf memory-term fix)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    use_pallas=None, interpret=None):
+    """q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd).  On TPU: the Pallas
+    kernel (scores never leave VMEM); elsewhere: the exact jnp flash."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models import attention as attn_lib
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=interp)
+    b, t = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    return attn_lib.attend(q, k, v, pos, pos, causal=causal, window=window,
+                           flash_threshold=1 << 62)

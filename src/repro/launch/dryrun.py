@@ -1,0 +1,500 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first
+# init, and the production-mesh dry-run needs 512 placeholder devices.
+# Everything below this line may import jax.
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_lib
+from repro.models.model import LanguageModel
+from repro.models.frontends import AUDIO_FEATURE_DIM, VISION_FEATURE_DIM
+from repro.serving.engine import make_decode_fn, make_prefill_fn
+from repro.sharding import partitioning as part
+from repro.train.trainer import TrainConfig, make_train_step
+from repro.train.train_state import new_train_state
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in the optimized
+    (post-SPMD) per-device HLO module.  Grouped by op kind; '-start'
+    variants counted once (async pairs)."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in COLLECTIVE_OPS:
+            # match ` op(`, ` op-start(` but not fusion mentions
+            if re.search(rf"\s{op}(-start)?\(", rhs) or \
+               rhs.startswith(f"{op}(") or rhs.startswith(f"{op}-start("):
+                if f"{op}-done" in rhs:
+                    break
+                lhs_types = rhs.split(op)[0]
+                out[op]["count"] += 1
+                out[op]["bytes"] += _shape_bytes(lhs_types)
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg, seq_len: int, global_batch: int) -> dict:
+    specs = {}
+    text_len = seq_len
+    if cfg.frontend == "vision":
+        text_len = seq_len - cfg.num_prefix_tokens
+        specs["prefix_feats"] = _sds((global_batch, cfg.num_prefix_tokens,
+                                      VISION_FEATURE_DIM), jnp.float32)
+    specs["tokens"] = _sds((global_batch, text_len + 1), jnp.int32)
+    if cfg.num_encoder_layers:
+        # audio frames are length-adapted ~4x shorter than target text
+        specs["enc_feats"] = _sds((global_batch, max(1, seq_len // 4),
+                                   AUDIO_FEATURE_DIM), jnp.float32)
+    return specs
+
+
+def prefill_batch_specs(cfg, seq_len: int, global_batch: int) -> dict:
+    specs = train_batch_specs(cfg, seq_len, global_batch)
+    specs["tokens"] = _sds((specs["tokens"].shape[0],
+                            specs["tokens"].shape[1] - 1), jnp.int32)
+    return specs
+
+
+def cast_float_leaves(tree, dtype):
+    def per(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return _sds(s.shape, dtype)
+        return s
+    return jax.tree.map(per, tree)
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers for caches / enc_kvs
+# ---------------------------------------------------------------------------
+
+def tree_shardings_by_rank(mesh, rules_cfg, tree, cfg):
+    """Heuristic for serve-side state: dim0 = layers (replicated),
+    dim1 = batch; last dim of >=4D leaves tries 'model' via kv-heads/
+    width divisibility."""
+    rules = rules_cfg.table(mesh)
+
+    def per(s):
+        nd = len(s.shape)
+        logical = [None] * nd
+        if nd >= 2:
+            logical[1] = "batch"
+        if nd >= 4:
+            # (layers, batch, seq, kv, hd) or (layers, batch, kv, hd, hd)
+            logical[-2] = "kv_heads" if nd == 5 else "heads"
+            logical[-1] = None
+        if nd == 3:
+            logical[-1] = "mlp"      # recurrent h (layers, batch, width)
+        return NamedSharding(mesh, part.resolve_spec(mesh, rules, logical,
+                                                     s.shape))
+
+    return jax.tree.map(per, tree)
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    skipped: bool = False
+    reason: str = ""
+    seconds: float = 0.0
+    data: Optional[dict] = None
+
+
+def _train_cfg_for(cfg, global_batch: int, mesh) -> TrainConfig:
+    data_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    if cfg.d_model >= 12288 or cfg.num_experts >= 8:
+        micro = 16                       # 100B-class: 1 row/device/micro
+    elif cfg.d_model >= 6144:
+        micro = 8
+    else:
+        micro = 4
+    while micro > 1 and (global_batch % (micro * data_size)) != 0:
+        micro //= 2
+    return TrainConfig(optimizer="adamw", num_microbatches=micro,
+                       master_weights=cfg.param_dtype is not None,
+                       total_steps=10_000, warmup_steps=500)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               fsdp: bool = True, sp: Optional[bool] = None,
+               mach: str = "auto", save_hlo: bool = False) -> CellResult:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch, mach=mach)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return CellResult(arch, shape, mesh_name, ok=True, skipped=True,
+                          reason=reason)
+    spec = SHAPES[shape]
+    t0 = time.time()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    if sp is None:
+        # §Perf cell 1 (mistral-large train): sequence-parallel residual
+        # sharding REGRESSED collectives 11x (per-layer full-seq
+        # all-gathers) and is unnecessary for memory once params are
+        # bf16 with f32 masters — default OFF, opt-in via --sp on.
+        sp = False
+    # serving: TP-only params for small models; weight sharding over the
+    # data axis too (serve-FSDP, gathered layer-by-layer) once the
+    # per-chip TP shard alone would blow HBM (mistral-123b: 15.4 GB)
+    serve_fsdp = (cfg.param_count_estimate() * 2 / 16 > 6e9)
+    rules = part.ShardingRules(
+        fsdp=(fsdp if spec["kind"] == "train" else serve_fsdp), sp=sp)
+    model = LanguageModel(cfg)
+    kind = spec["kind"]
+
+    with part.activate(mesh, rules):
+        if kind == "train":
+            lowered = _lower_train(model, cfg, mesh, rules, spec)
+        elif kind == "prefill":
+            lowered = _lower_prefill(model, cfg, mesh, rules, spec)
+        else:
+            lowered = _lower_decode(model, cfg, mesh, rules, spec)
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)                # raw, body-once (reference)
+    corrected = hlo_analysis.analyze(hlo)        # trip-count-corrected
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # XLA's cost_analysis counts while bodies ONCE (verified); the
+    # corrected numbers multiply loop bodies by parsed trip counts.
+    flops_dev = float(corrected["flops"])
+    bytes_dev = float(corrected["bytes"])
+    compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_dev / mesh_lib.HBM_BW
+    coll_s = corrected["collective_wire_bytes"] / mesh_lib.ICI_BW
+    n_params = cfg.param_count_estimate()
+    # MODEL_FLOPS: 6·N·D for train; 2·N·D for inference forward
+    spec_d = SHAPES[shape]
+    tokens = spec_d["seq_len"] * spec_d["global_batch"] if kind != "decode" \
+        else spec_d["global_batch"]
+    n_active = _active_params(cfg)
+    model_flops = (6 if kind == "train" else 2) * n_active * tokens
+    hlo_flops_global = flops_dev * n_chips
+
+    data = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "kind": kind,
+        "chips": n_chips,
+        "memory": _memory_record(ma, hlo),
+        "cost": {
+            "flops_per_device": flops_dev,
+            "flops_global": hlo_flops_global,
+            "bytes_accessed_per_device": bytes_dev,
+            "xla_raw_flops_body_once": float(ca.get("flops", 0.0)),
+            "xla_raw_bytes_body_once": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collectives": corrected["collectives"],
+        "collectives_raw_body_once": coll,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "bottleneck": max(
+                (("compute", compute_s), ("memory", memory_s),
+                 ("collective", coll_s)), key=lambda kv: kv[1])[0],
+            "model_flops": model_flops,
+            "useful_flops_fraction": (model_flops / hlo_flops_global
+                                      if hlo_flops_global else 0.0),
+        },
+        "config": {
+            "params_analytic": n_params, "params_active": n_active,
+            "fsdp": rules.fsdp, "sp": rules.sp,
+            "mach": (dataclasses.asdict(cfg.mach) if cfg.mach else None),
+        },
+    }
+    res = CellResult(arch, shape, mesh_name, ok=True,
+                     seconds=time.time() - t0, data=data)
+    if save_hlo:
+        res.data["hlo_path"] = _save_hlo(arch, shape, mesh_name, hlo)
+    return res
+
+
+def _memory_record(ma, hlo: str) -> dict:
+    """Per-device HBM accounting.
+
+    The CPU backend cannot matmul bf16, so XLA materializes hoisted f32
+    copies of large bf16 buffers (KV caches, saved activation history)
+    that DO NOT EXIST in a TPU compile (MXUs read bf16 natively) — see
+    hlo_analysis.hoisted_f32_copy_bytes.  We report both the raw
+    CPU-backend numbers and the TPU-adjusted figure (raw temp minus the
+    top-3 hoisted copies, floored at 10% of temp); `fits_hbm` uses the
+    adjusted figure, `fits_hbm_cpu_raw` the raw one.
+    """
+    hoisted = hlo_analysis.hoisted_f32_copy_bytes(hlo)
+    temp_adj = int(max(ma.temp_size_in_bytes - hoisted,
+                       0.1 * ma.temp_size_in_bytes))
+    out_net = max(0, ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "per_device_peak_bytes": int(ma.peak_memory_in_bytes),
+        "per_device_argument_bytes": int(ma.argument_size_in_bytes),
+        "per_device_temp_bytes": int(ma.temp_size_in_bytes),
+        "per_device_temp_tpu_adjusted_bytes": temp_adj,
+        "per_device_hoisted_f32_copy_bytes": int(hoisted),
+        "per_device_output_bytes": int(ma.output_size_in_bytes),
+        "per_device_alias_bytes": int(ma.alias_size_in_bytes),
+        "fits_hbm": bool(ma.argument_size_in_bytes + temp_adj + out_net
+                         <= mesh_lib.HBM_PER_CHIP),
+        "fits_hbm_cpu_raw": bool(
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes + out_net
+            <= mesh_lib.HBM_PER_CHIP),
+    }
+
+
+def _active_params(cfg) -> int:
+    """Active (per-token) params: MoE counts top-k + shared experts only."""
+    total = cfg.param_count_estimate()
+    if not cfg.num_experts:
+        return total
+    mo = cfg.moe_d_ff or cfg.d_ff
+    per_layer_all = cfg.num_experts * 3 * cfg.d_model * mo
+    per_layer_act = cfg.experts_top_k * 3 * cfg.d_model * mo
+    n_moe_layers = sum(1 for k in cfg.layout() if k == "moe")
+    return total - n_moe_layers * (per_layer_all - per_layer_act)
+
+
+def _lower_train(model, cfg, mesh, rules, spec):
+    tcfg = _train_cfg_for(cfg, spec["global_batch"], mesh)
+    step_fn, opt = make_train_step(model.loss, tcfg)
+    state_shapes, state_shard, _ = part.state_shardings(mesh, rules, model, opt)
+    batch_specs = train_batch_specs(cfg, spec["seq_len"], spec["global_batch"])
+    batch_shard = part.batch_shardings(mesh, part.ShardingRules(
+        fsdp=rules.fsdp, sp=False), batch_specs)
+    rep = NamedSharding(mesh, P())
+    metrics_shapes = jax.eval_shape(step_fn, state_shapes, batch_specs)[1]
+    metrics_shard = jax.tree.map(lambda _: rep, metrics_shapes)
+    return jax.jit(step_fn,
+                   in_shardings=(state_shard, batch_shard),
+                   out_shardings=(state_shard, metrics_shard),
+                   donate_argnums=(0,)).lower(state_shapes, batch_specs)
+
+
+def _serve_param_shapes(model, cfg, mesh, rules):
+    params_shapes, axes = part.eval_shape_with_axes(model.init,
+                                                    jax.random.key(0))
+    params_shapes = cast_float_leaves(params_shapes, cfg.dtype)
+    p_shard = part.params_shardings(mesh, rules, axes, params_shapes)
+    return params_shapes, p_shard
+
+
+def _lower_prefill(model, cfg, mesh, rules, spec):
+    params_shapes, p_shard = _serve_param_shapes(model, cfg, mesh, rules)
+    batch_specs = prefill_batch_specs(cfg, spec["seq_len"],
+                                      spec["global_batch"])
+    batch_shard = part.batch_shardings(mesh, rules, batch_specs)
+    prefill = make_prefill_fn(model)
+    fn = lambda p, b: prefill(p, b, max_len=spec["seq_len"] + 64)
+    out_shapes = jax.eval_shape(fn, params_shapes, batch_specs)
+    ids_shard = part.batch_shardings(mesh, rules, out_shapes[2])
+    # caches / enc_kvs out-shardings stay UNSPECIFIED: XLA places the
+    # serve-state (it shards GQA kv groups over mesh subgroups, which
+    # PartitionSpec cannot express) — pinning them forces reshard
+    # all-gathers of the whole cache at the step boundary.
+    return jax.jit(fn, in_shardings=(p_shard, batch_shard),
+                   out_shardings=(None, None, ids_shard)
+                   ).lower(params_shapes, batch_specs)
+
+
+def _lower_decode(model, cfg, mesh, rules, spec):
+    params_shapes, p_shard = _serve_param_shapes(model, cfg, mesh, rules)
+    gb, s = spec["global_batch"], spec["seq_len"]
+    caches_shapes = jax.eval_shape(lambda: model.init_caches(gb, s))
+    enc_shapes = None
+    if cfg.num_encoder_layers:
+        enc_out = _sds((gb, max(1, s // 4), cfg.d_model), cfg.dtype)
+        enc_shapes = jax.eval_shape(
+            model.enc_kvs,
+            part.eval_shape_with_axes(model.init, jax.random.key(0))[0],
+            enc_out)
+        enc_shapes = cast_float_leaves(enc_shapes, cfg.dtype)
+    tok_specs = _sds((gb,), jnp.int32)
+    pos_specs = _sds((gb,), jnp.int32)
+    tok_shard = part.batch_shardings(mesh, rules, tok_specs)
+    decode = make_decode_fn(model)
+    ids_shard = part.batch_shardings(mesh, rules, tok_specs)
+    # cache/enc_kv shardings UNSPECIFIED (XLA GSPMD places loop state —
+    # see _lower_prefill) + donated: the output cache aliases the input,
+    # matching the steady-state serving loop.
+    return jax.jit(decode,
+                   in_shardings=(p_shard, None, None, tok_shard, tok_shard),
+                   out_shardings=(None, ids_shard),
+                   donate_argnums=(1,),
+                   ).lower(params_shapes, caches_shapes, enc_shapes,
+                           tok_specs, pos_specs)
+
+
+def _save_hlo(arch, shape, mesh_name, hlo) -> str:
+    d = os.path.join(ARTIFACT_DIR, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{arch}__{shape}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run_one(args) -> int:
+    res = lower_cell(args.arch, args.shape, args.multi_pod,
+                     fsdp=not args.no_fsdp,
+                     sp=None if args.sp == "auto" else args.sp == "on",
+                     mach=args.mach, save_hlo=args.save_hlo)
+    d = os.path.join(ARTIFACT_DIR, res.mesh)
+    os.makedirs(d, exist_ok=True)
+    out = os.path.join(d, f"{args.arch}__{args.shape}.json")
+    payload = dataclasses.asdict(res)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    if res.skipped:
+        print(f"SKIP {args.arch} × {args.shape} [{res.mesh}]: {res.reason}")
+        return 0
+    rf = res.data["roofline"]
+    mem = res.data["memory"]
+    print(f"OK {args.arch} × {args.shape} [{res.mesh}] "
+          f"{res.seconds:.0f}s  peak/dev={mem['per_device_peak_bytes']/2**30:.2f}GiB "
+          f"fits={mem['fits_hbm']}  "
+          f"compute={rf['compute_s']*1e3:.2f}ms memory={rf['memory_s']*1e3:.2f}ms "
+          f"coll={rf['collective_s']*1e3:.2f}ms -> {rf['bottleneck']}")
+    print(json.dumps({"memory_analysis": res.data["memory"],
+                      "cost_analysis": res.data["cost"]}, indent=1))
+    return 0
+
+
+def run_all(args) -> int:
+    """Spawn one subprocess per cell (isolates compile memory; a failed
+    cell doesn't kill the sweep)."""
+    fails = []
+    meshes = [False, True] if args.mesh == "both" else \
+        [args.mesh == "multi"]
+    for multi in meshes:
+        for arch in (args.archs or ARCH_IDS):
+            for shape in (args.shapes or SHAPES):
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                out = os.path.join(ARTIFACT_DIR, mesh_name,
+                                   f"{arch}__{shape}.json")
+                if args.resume and os.path.exists(out):
+                    with open(out) as f:
+                        if json.load(f).get("ok"):
+                            continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape]
+                if multi:
+                    cmd.append("--multi-pod")
+                for flag in ("--no-fsdp",):
+                    if getattr(args, flag.strip("-").replace("-", "_"), False):
+                        cmd.append(flag)
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=3600)
+                tail = (r.stdout.strip().splitlines() or [""])[0]
+                print(f"[{time.strftime('%H:%M:%S')}] {mesh_name} {arch} × "
+                      f"{shape}: rc={r.returncode} ({time.time()-t0:.0f}s) "
+                      f"{tail[:110]}")
+                if r.returncode != 0:
+                    fails.append((mesh_name, arch, shape))
+                    err = (r.stderr or "").strip().splitlines()
+                    print("   " + "\n   ".join(err[-6:]))
+    print(f"\n{'ALL CELLS PASS' if not fails else f'{len(fails)} FAILURES'}")
+    for f3 in fails:
+        print("  FAIL:", *f3)
+    return 1 if fails else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true", dest="multi_pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--no-fsdp", action="store_true", dest="no_fsdp")
+    ap.add_argument("--sp", choices=("auto", "on", "off"), default="auto")
+    ap.add_argument("--mach", choices=("auto", "on", "off"), default="auto")
+    ap.add_argument("--save-hlo", action="store_true", dest="save_hlo")
+    args = ap.parse_args()
+    if args.all:
+        return run_all(args)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        return run_one(args)
+    except Exception:
+        traceback.print_exc()
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

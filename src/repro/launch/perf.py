@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Perf hillclimbing driver (§Perf): lowers named VARIANTS of the three
+# hillclimb cells and records the roofline deltas.  Each variant is a
+# (config transform, rules override) pair; results go to
+# artifacts/perf/<cell>__<variant>.json for EXPERIMENTS.md §Perf.
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+
+from repro.configs import get_config, SHAPES
+from repro.launch import dryrun as dr
+from repro.launch import mesh as mesh_lib
+from repro.launch import hlo_analysis
+from repro.models.model import LanguageModel
+from repro.sharding import partitioning as part
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "perf")
+
+
+def lower_variant(arch: str, shape: str, *, multi_pod=False, mach="auto",
+                  cfg_updates=None, fsdp=True, sp=None,
+                  mach_pod_parallel=False, micro=None, top_bytes=0):
+    cfg = get_config(arch, mach=mach)
+    if cfg_updates:
+        cfg = dataclasses.replace(cfg, **cfg_updates)
+    spec = SHAPES[shape]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    if sp is None:
+        sp = False       # §Perf cell 1: SP regresses collectives 11x
+    serve_fsdp = (cfg.param_count_estimate() * 2 / 16 > 6e9)
+    rules = part.ShardingRules(
+        fsdp=(fsdp if spec["kind"] == "train" else serve_fsdp), sp=sp,
+        mach_pod_parallel=mach_pod_parallel)
+    model = LanguageModel(cfg)
+    kind = spec["kind"]
+
+    if micro is not None:
+        orig = dr._train_cfg_for
+
+        def patched(cfg2, gb, mesh2):
+            t = orig(cfg2, gb, mesh2)
+            return dataclasses.replace(t, num_microbatches=micro)
+        dr._train_cfg_for = patched
+    try:
+        with part.activate(mesh, rules):
+            if kind == "train":
+                lowered = dr._lower_train(model, cfg, mesh, rules, spec)
+            elif kind == "prefill":
+                lowered = dr._lower_prefill(model, cfg, mesh, rules, spec)
+            else:
+                lowered = dr._lower_decode(model, cfg, mesh, rules, spec)
+            compiled = lowered.compile()
+    finally:
+        if micro is not None:
+            dr._train_cfg_for = orig
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    res = hlo_analysis.analyze(hlo, top_k=top_bytes)
+    out = {
+        "flops_dev": res["flops"],
+        "bytes_dev": res["bytes"],
+        "coll_wire": res["collective_wire_bytes"],
+        "collectives": res["collectives"],
+        "compute_s": res["flops"] / mesh_lib.PEAK_FLOPS_BF16,
+        "memory_s": res["bytes"] / mesh_lib.HBM_BW,
+        "collective_s": res["collective_wire_bytes"] / mesh_lib.ICI_BW,
+        "memory": dr._memory_record(ma, hlo),
+    }
+    if top_bytes:
+        out["top_bytes"] = res["top_bytes"]
+    return out
+
+
+def report(cell, variant, r):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{cell}__{variant}.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    m = r["memory"]
+    print(f"{cell} [{variant}]: compute={r['compute_s']:.2f}s "
+          f"memory={r['memory_s']:.2f}s coll={r['collective_s']:.2f}s | "
+          f"args={m['per_device_argument_bytes']/2**30:.1f}G "
+          f"temp_adj={m['per_device_temp_tpu_adjusted_bytes']/2**30:.1f}G "
+          f"fits={m['fits_hbm']}", flush=True)
+    for k, v in r["collectives"].items():
+        print(f"    {k}: n={v['count']:.0f} wire={v['wire_bytes']/1e9:.1f}GB")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=["paligemma_train", "mistral_train",
+                             "mixtral_prefill", "qwen_train",
+                             "paligemma_decode"])
+    ap.add_argument("--variant", required=True)
+    args = ap.parse_args()
+    c, v = args.cell, args.variant
+
+    if c == "paligemma_train":
+        kw = dict(arch="paligemma-3b", shape="train_4k")
+        variants = {
+            "oaa_head": dict(mach="off"),                 # paper's baseline
+            "mach_head": dict(mach="auto"),               # paper technique
+            "mach_sp": dict(mach="auto", sp=True),
+            "mach_pod_parallel": dict(mach="auto", multi_pod=True,
+                                      mach_pod_parallel=True),
+            "mach_multipod": dict(mach="auto", multi_pod=True),
+        }
+    elif c == "mistral_train":
+        kw = dict(arch="mistral-large-123b", shape="train_4k")
+        variants = {
+            "base": dict(top_bytes=12),
+            "no_sp": dict(sp=False),
+            "micro8": dict(micro=8),
+            "micro8_nosp": dict(micro=8, sp=False),
+            "final_top": dict(micro=8, sp=False, top_bytes=14),
+            "sp_on": dict(sp=True, top_bytes=12),
+        }
+    elif c == "qwen_train":
+        kw = dict(arch="qwen2-moe-a2.7b", shape="train_4k")
+        variants = {
+            "oaa_head": dict(mach="off"),
+            "mach_head": dict(mach="auto"),
+            "mach_B4096_R4": dict(mach="auto", cfg_updates=dict(
+                mach=__import__("repro.core.mach", fromlist=["MACHConfig"]
+                                ).MACHConfig(151936, 4096, 4))),
+        }
+    elif c == "paligemma_decode":
+        kw = dict(arch="paligemma-3b", shape="decode_32k")
+        variants = {
+            "oaa_head": dict(mach="off"),
+            "mach_head": dict(mach="auto"),
+        }
+    else:
+        kw = dict(arch="mixtral-8x22b", shape="prefill_32k")
+        variants = {
+            "base": dict(top_bytes=12),
+            "group4096": dict(cfg_updates=dict(moe_group_size=4096)),
+            "group8192": dict(cfg_updates=dict(moe_group_size=8192)),
+            "bigchunks": dict(cfg_updates=dict(chunk_q=1024, chunk_k=2048)),
+            "group512": dict(cfg_updates=dict(moe_group_size=512)),
+            "final_top": dict(cfg_updates=dict(moe_group_size=512),
+                              top_bytes=14),
+            "ep_pad16": dict(cfg_updates=dict(moe_group_size=512,
+                                              num_experts=16)),
+        }
+    report(c, v, lower_variant(**kw, **variants[v]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""Model substrate for the assigned architectures."""
+
+from repro.models.model import LanguageModel
+from repro.models.transformer import ModelConfig, plan_stacks
+
+__all__ = ["LanguageModel", "ModelConfig", "plan_stacks"]

@@ -1,0 +1,265 @@
+"""Attention substrate: MHA/GQA/MQA, full/sliding-window/local, caches.
+
+Three execution paths, all numerically the softmax attention:
+
+* ``_attend_dense``   — small sequences: one materialized score tensor.
+* ``_attend_flash``   — jnp flash attention: lax.scan over query chunks,
+                        inner scan over KV chunks with running
+                        (max, denom, acc) — O(cq·ck) live memory, exact.
+* banded window       — sliding-window/local attention slices only the
+                        [qs − window, qs + cq) key band per query chunk:
+                        O(T·(window+cq)) FLOPs instead of O(T²).
+
+Decode uses a KV cache: linear cache for full attention, ring buffer of
+size ``window`` for sliding-window archs — the latter is what makes
+``long_500k`` decode O(window) memory at 524 288 context.
+
+Shapes: activations (B, T, D); q (B, T, H, hd); k/v (B, S, KV, hd);
+GQA groups G = H // KV are folded as (B, T, KV, G, hd) for the einsums.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, model_divisor: int = 1):
+    """QKV + output projections.
+
+    ``model_divisor``: if num_heads isn't divisible by the model-axis
+    size the partitioner falls back to row-parallel sharding on 'embed';
+    the axes we emit here are *logical* and the fallback happens in
+    sharding/partitioning.py, so this arg is only kept for documentation.
+    """
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["q"], a["q"] = layers.init_dense(kq, d_model, (num_heads, head_dim),
+                                       "embed", ("heads", "qkv"))
+    p["k"], a["k"] = layers.init_dense(kk, d_model, (num_kv_heads, head_dim),
+                                       "embed", ("kv_heads", "qkv"))
+    p["v"], a["v"] = layers.init_dense(kv, d_model, (num_kv_heads, head_dim),
+                                       "embed", ("kv_heads", "qkv"))
+    po = layers.truncated_normal_init(ko, (num_heads, head_dim, d_model), 1.0)
+    p["o"], a["o"] = {"kernel": po}, {"kernel": ("heads", "qkv", "embed")}
+    return p, a
+
+
+def _group(q: jnp.ndarray, num_kv: int) -> jnp.ndarray:
+    """(B, T, H, hd) -> (B, T, KV, G, hd)."""
+    b, t, h, hd = q.shape
+    return q.reshape(b, t, num_kv, h // num_kv, hd)
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(B, Tq), (B, Sk) -> (B, 1, 1, Tq, Sk) additive mask."""
+    qp = q_pos[:, None, None, :, None]
+    kp = k_pos[:, None, None, None, :]
+    ok = kp >= 0                                   # -1 marks empty cache slots
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_dense(q, k, v, q_pos, k_pos, causal, window, scale):
+    """q: (B,T,KV,G,hd); k/v: (B,S,KV,hd) -> (B,T,KV,G,hd).
+
+    K/V stay in their storage dtype (bf16) — accumulation happens in f32
+    via preferred_element_type.  An explicit .astype(f32) on the cache
+    operand would materialize an f32 copy of the whole KV cache (and on
+    the CPU backend, hoist+all-gather it)."""
+    s = jnp.einsum("btkgh,bskh->bkgts", (q.astype(jnp.float32) * scale
+                                         ).astype(q.dtype), k,
+                   preferred_element_type=jnp.float32)
+    m = _mask(q_pos, k_pos, causal, window)        # (B,1,1,T,S)
+    s = s + m                                      # broadcast over (KV,G)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce uniform softmax over -inf -> nan; zero them
+    valid = jnp.any(m > NEG_INF / 2, axis=-1, keepdims=True)
+    p = jnp.where(valid, p, 0.0)
+    out = jnp.einsum("bkgts,bskh->btkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _attend_flash(q, k, v, q_pos, k_pos, causal, window, scale,
+                  chunk_q: int, chunk_k: int):
+    """Exact two-level online-softmax attention (jnp 'flash').
+
+    Banded mode: when ``window`` is set and the band [qs−window, qs+cq)
+    is shorter than S, only that key band is sliced per query chunk —
+    sub-quadratic FLOPs for sliding-window archs.
+    """
+    b, t, kv, g, hd = q.shape
+    s_len = k.shape[1]
+    cq = min(chunk_q, t)
+    ck = min(chunk_k, s_len)
+    assert t % cq == 0, (t, cq)
+    band = window is not None and (window + cq) < s_len
+    band_len = None
+    if band:
+        band_len = min(s_len, ((window + cq + ck - 1) // ck) * ck)
+
+    kf = k          # storage dtype; f32 accumulation via the einsums
+    vf = v
+
+    def q_chunk_body(_, qi):
+        qs = qi * cq
+        qc = (jax.lax.dynamic_slice_in_dim(q, qs, cq, axis=1)
+              .astype(jnp.float32) * scale).astype(q.dtype)
+        qpc = jax.lax.dynamic_slice_in_dim(q_pos, qs, cq, axis=1)
+
+        if band:
+            ks = jnp.clip(qs + cq - band_len, 0, s_len - band_len)
+            kb = jax.lax.dynamic_slice_in_dim(kf, ks, band_len, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vf, ks, band_len, axis=1)
+            kpb = jax.lax.dynamic_slice_in_dim(k_pos, ks, band_len, axis=1)
+        else:
+            kb, vb, kpb = kf, vf, k_pos
+        sb = kb.shape[1]
+
+        def kv_chunk_body(carry, kj):
+            m_run, l_run, acc = carry
+            ksl = kj * ck
+            kc = jax.lax.dynamic_slice_in_dim(kb, ksl, ck, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vb, ksl, ck, axis=1)
+            kpc = jax.lax.dynamic_slice_in_dim(kpb, ksl, ck, axis=1)
+            s = jnp.einsum("btkgh,bskh->bkgts", qc, kc,
+                           preferred_element_type=jnp.float32)
+            s = s + _mask(qpc, kpc, causal, window)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            corr = jnp.exp(m_run - m_new)
+            e = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + jnp.sum(e, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgts,bskh->bkgth", e.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kv, g, cq), NEG_INF, jnp.float32),
+                jnp.zeros((b, kv, g, cq), jnp.float32),
+                jnp.zeros((b, kv, g, cq, hd), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_chunk_body, init,
+                                          jnp.arange(sb // ck))
+        out = acc / jnp.maximum(l_f, 1e-37)[..., None]
+        out = jnp.where((l_f > 0)[..., None], out, 0.0)
+        return None, out.transpose(0, 3, 1, 2, 4)   # (B, cq, KV, G, hd)
+
+    _, chunks = jax.lax.scan(q_chunk_body, None, jnp.arange(t // cq))
+    # chunks: (nq, B, cq, KV, G, hd) -> (B, T, KV, G, hd)
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, t, kv, g, hd)
+    return out.astype(q.dtype)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           q_pos: jnp.ndarray, k_pos: jnp.ndarray, *,
+           causal: bool = True, window: Optional[int] = None,
+           flash_threshold: int = 2048,
+           chunk_q: int = 512, chunk_k: int = 1024) -> jnp.ndarray:
+    """Dispatching attention. q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd)."""
+    b, t, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _group(q, kvh)
+    scale = 1.0 / math.sqrt(hd)
+    use_flash = t >= flash_threshold and t % min(chunk_q, t) == 0
+    if use_flash:
+        out = _attend_flash(qg, k, v, q_pos, k_pos, causal, window, scale,
+                            chunk_q, chunk_k)
+    else:
+        out = _attend_dense(qg, k, v, q_pos, k_pos, causal, window, scale)
+    return out.reshape(b, t, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Linear or ring-buffer KV cache.
+
+    k, v:      (B, S, KV, hd) — S = max_len (linear) or window (ring)
+    positions: (B, S) int32 absolute positions; −1 = empty
+    index:     (B,) int32 next write offset (absolute count of tokens)
+    ring:      python bool (static) — ring-buffer mode
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    positions: jnp.ndarray
+    index: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_cache(batch: int, capacity: int, num_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, num_kv, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, num_kv, head_dim), dtype),
+        positions=jnp.full((batch, capacity), -1, jnp.int32),
+        index=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_update_prefill(cache: KVCache, k: jnp.ndarray, v: jnp.ndarray,
+                         positions: jnp.ndarray) -> KVCache:
+    """Write a full prefill segment at the cache head (linear caches) or
+    the last ``capacity`` tokens of it (ring caches)."""
+    t = k.shape[1]
+    cap = cache.capacity
+    if t <= cap:
+        newk = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+        newv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+        newp = jax.lax.dynamic_update_slice_in_dim(cache.positions, positions, 0, axis=1)
+    else:
+        # keep only the trailing window, rolled so the ring invariant
+        # (position p lives at row p mod cap) holds for subsequent decode
+        shift = t % cap
+        newk = jnp.roll(k[:, t - cap:].astype(cache.k.dtype), shift, axis=1)
+        newv = jnp.roll(v[:, t - cap:].astype(cache.v.dtype), shift, axis=1)
+        newp = jnp.roll(positions[:, t - cap:], shift, axis=1)
+    return KVCache(newk, newv, newp, cache.index + t)
+
+
+def cache_update_decode(cache: KVCache, k1: jnp.ndarray, v1: jnp.ndarray,
+                        ring: bool) -> KVCache:
+    """Insert one token (B, 1, KV, hd) — *lockstep* decode: every row
+    writes at the same position (the serving engine left-pads prompts so
+    batches decode in lockstep).
+
+    A single scalar-indexed dynamic_update_slice keeps the update local
+    under SPMD.  (A per-row vmapped scatter here makes XLA all-gather
+    the entire batch-sharded cache — 11.8 GB/token on the decode_32k
+    cell — which is why this isn't expressed per-row.)
+    """
+    idx = cache.index            # (B,), uniform values in lockstep decode
+    pos = idx[0]                 # scalar write position
+    slot = jnp.mod(pos, cache.capacity) if ring else pos
+    zero = jnp.zeros((), slot.dtype)
+    newk = jax.lax.dynamic_update_slice(
+        cache.k, k1.astype(cache.k.dtype), (zero, slot, zero, zero))
+    newv = jax.lax.dynamic_update_slice(
+        cache.v, v1.astype(cache.v.dtype), (zero, slot, zero, zero))
+    newp = jax.lax.dynamic_update_slice(
+        cache.positions, jnp.broadcast_to(pos, (cache.positions.shape[0], 1)
+                                          ).astype(jnp.int32), (zero, slot))
+    return KVCache(newk, newv, newp, idx + 1)
+
+
+def decode_attend(q1: jnp.ndarray, cache: KVCache, *,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token attention over the cache.  q1: (B, 1, H, hd)."""
+    q_pos = cache.index[:, None] - 1          # position of the new token
+    return attend(q1, cache.k, cache.v, q_pos, cache.positions,
+                  causal=True, window=window, flash_threshold=1 << 62)

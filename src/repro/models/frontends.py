@@ -1,0 +1,38 @@
+"""Modality frontend stubs ([audio] seamless-m4t, [vlm] paligemma).
+
+Per the assignment, [audio]/[vlm] entries specify the transformer
+BACKBONE only; the modality frontend is a STUB — ``input_specs()``
+provides precomputed frame/patch embeddings.  What remains trainable
+here is a linear adapter projecting frontend features into the
+backbone's d_model (the "multimodal projector" in PaLiGemma / the
+length-adapted conformer output projection in SeamlessM4T).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+# feature dims of the (stubbed) frontends
+AUDIO_FEATURE_DIM = 1024     # w2v-BERT 2.0 conformer output (seamless)
+VISION_FEATURE_DIM = 1152    # SigLIP-So400m/14 output (paligemma)
+
+
+def init_adapter(key, feature_dim: int, d_model: int):
+    p, a = layers.init_dense(key, feature_dim, (d_model,), None, ("embed",))
+    return {"proj": p}, {"proj": a}
+
+
+def apply_adapter(params, feats: jnp.ndarray, dtype) -> jnp.ndarray:
+    """(B, S, feature_dim) precomputed frontend features -> (B, S, d_model)."""
+    return layers.dense(params["proj"], feats.astype(dtype))
+
+
+def frontend_feature_dim(kind: str) -> int:
+    if kind == "audio":
+        return AUDIO_FEATURE_DIM
+    if kind == "vision":
+        return VISION_FEATURE_DIM
+    raise ValueError(f"unknown frontend {kind!r}")

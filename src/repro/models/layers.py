@@ -1,0 +1,167 @@
+"""Shared neural-net layers (pure-functional, pytree params).
+
+Every ``init_*`` returns ``(params, axes)`` — two pytrees of identical
+structure where ``axes`` holds the *logical* axis name per dimension of
+each parameter (or None).  ``sharding/partitioning.py`` maps logical
+axes onto the device mesh; models never mention mesh axes directly.
+
+Logical axis vocabulary:
+  batch, seq            activations
+  embed                 d_model
+  mlp                   feed-forward hidden
+  heads, kv_heads, qkv  attention projections (qkv = head_dim)
+  vocab                 embedding / OAA softmax rows
+  mach_rb               MACH head output (R·B)
+  experts               MoE expert dimension
+  layers                stacked-scan layer dimension (never sharded)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    """Fan-in scaled truncated normal (MaxText-style default)."""
+    stddev = scale / max(1.0, math.sqrt(shape[0] if len(shape) else 1))
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype) * stddev
+
+
+def init_dense(key, in_dim: int, out_dims: Sequence[int],
+               in_axis: Optional[str], out_axes: Sequence[Optional[str]],
+               scale: float = 1.0):
+    """Dense kernel (in_dim, *out_dims) with fan-in init."""
+    shape = (in_dim,) + tuple(out_dims)
+    w = truncated_normal_init(key, shape, scale)
+    return {"kernel": w}, {"kernel": (in_axis,) + tuple(out_axes)}
+
+
+def dense(params, x: jnp.ndarray, ndim_out: int = 1) -> jnp.ndarray:
+    """x (..., in) @ kernel (in, *out) -> (..., *out)."""
+    k = params["kernel"].astype(x.dtype)
+    return jax.lax.dot_general(
+        x, k, (((x.ndim - 1,), (0,)), ((), ())))
+
+
+def init_norm(dim: int, kind: str = "rmsnorm", axis: Optional[str] = None):
+    if kind == "rmsnorm":
+        return ({"scale": jnp.ones((dim,), jnp.float32)},
+                {"scale": (axis,)})
+    if kind == "layernorm":
+        return ({"scale": jnp.ones((dim,), jnp.float32),
+                 "bias": jnp.zeros((dim,), jnp.float32)},
+                {"scale": (axis,), "bias": (axis,)})
+    raise ValueError(kind)
+
+
+def apply_norm(params, x: jnp.ndarray, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, dim: int):
+    emb = truncated_normal_init(key, (vocab, dim), scale=1.0)
+    return {"embedding": emb}, {"embedding": ("vocab", "embed")}
+
+
+def embed(params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(params["embedding"], tokens, axis=0).astype(dtype)
+
+
+def unembed(params, h: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: h (..., d) @ E^T (d, V)."""
+    e = params["embedding"].astype(h.dtype)
+    return jax.lax.dot_general(h, e, (((h.ndim - 1,), (1,)), ((), ())))
+
+
+# ---------------------------------------------------------------------------
+# Activations / gated MLP
+# ---------------------------------------------------------------------------
+
+ACT = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str = "swiglu",
+             mlp_axis: str = "mlp"):
+    """Gated (swiglu/geglu) or plain MLP."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = activation in ("swiglu", "geglu")
+    p, a = {}, {}
+    p["wi"], a["wi"] = {}, {}
+    pi, ai = init_dense(k1, d_model, (d_ff,), "embed", (mlp_axis,))
+    p["wi"], a["wi"] = pi, ai
+    if gated:
+        pg, ag = init_dense(k2, d_model, (d_ff,), "embed", (mlp_axis,))
+        p["wg"], a["wg"] = pg, ag
+    po, ao = init_dense(k3, d_ff, (d_model,), mlp_axis, ("embed",))
+    p["wo"], a["wo"] = po, ao
+    return p, a
+
+
+def apply_mlp(params, x: jnp.ndarray, activation: str = "swiglu") -> jnp.ndarray:
+    h = dense(params["wi"], x)
+    if activation == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * h
+    elif activation == "geglu":
+        h = jax.nn.gelu(dense(params["wg"], x)) * h
+    else:
+        h = ACT[activation](h)
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+         ) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq        # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers shared by model assembly
+# ---------------------------------------------------------------------------
+
+def stack_inits(init_fn: Callable[[jax.Array], tuple[dict, dict]],
+                key: jax.Array, n: int):
+    """Initialize n copies of a module and stack leaves on axis 0
+    (the 'layers' scan dim).  Returns (params, axes) with axes gaining a
+    leading 'layers' entry."""
+    keys = jax.random.split(key, n)
+    ps, axs = [], None
+    for i in range(n):
+        p, a = init_fn(keys[i])
+        ps.append(p)
+        axs = a
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps)
+    axes = jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                        axs, is_leaf=lambda v: isinstance(v, tuple))
+    return stacked, axes

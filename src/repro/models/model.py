@@ -1,0 +1,304 @@
+"""LanguageModel: embeddings → (encoder) → scanned decoder stacks → head.
+
+One class serves all 10 assigned architectures; the config decides the
+block pattern, MoE/recurrent substrates, enc-dec structure, frontend
+stubs, and — the paper's feature — whether the output head is the dense
+OAA softmax or the MACH head.
+
+Public surface:
+  init(key)                       -> (params, axes)
+  loss(params, batch)             -> (loss, metrics)        [train_step body]
+  prefill(params, batch, max_len) -> (caches, enc_kvs, last_hidden)
+  decode_step(params, caches, enc_kvs, tokens, pos) -> (caches, hidden)
+  next_token(params, hidden)      -> (token ids, scores)    [greedy]
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mach import MACHOutputHead, mach_meta_probs
+from repro.kernels import ops
+from repro.models import attention as attn_lib
+from repro.models import frontends, layers, recurrent, xlstm
+from repro.models.transformer import (ModelConfig, apply_stacks, cross_kv,
+                                      init_stacks, plan_stacks)
+
+
+class LanguageModel:
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.head = (MACHOutputHead(cfg.mach, cfg.d_model, jnp.float32)
+                     if cfg.mach is not None else None)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p, a = {}, {}
+        p["embed"], a["embed"] = layers.init_embedding(
+            keys[0], cfg.vocab_size, cfg.d_model)
+        p["stacks"], a["stacks"] = init_stacks(keys[1], cfg, self._dec_layout())
+        p["final_norm"], a["final_norm"] = layers.init_norm(
+            cfg.d_model, cfg.norm, "embed")
+        if cfg.mach is not None:
+            hp = self.head.init(keys[2])
+            p["mach_head"] = hp
+            a["mach_head"] = {"kernel": ("embed", "mach_rb")}
+        elif not cfg.tie_embeddings:
+            p["lm_head"], a["lm_head"] = layers.init_dense(
+                keys[3], cfg.d_model, (cfg.vocab_size,), "embed", ("vocab",))
+        if cfg.num_encoder_layers:
+            p["enc_adapter"], a["enc_adapter"] = frontends.init_adapter(
+                keys[4], frontends.frontend_feature_dim(cfg.frontend or "audio"),
+                cfg.d_model)
+            p["enc_stacks"], a["enc_stacks"] = init_stacks(
+                keys[5], cfg, ["enc"] * cfg.num_encoder_layers)
+            p["enc_norm"], a["enc_norm"] = layers.init_norm(
+                cfg.d_model, cfg.norm, "embed")
+        if cfg.frontend == "vision":
+            p["vis_adapter"], a["vis_adapter"] = frontends.init_adapter(
+                keys[6], frontends.VISION_FEATURE_DIM, cfg.d_model)
+        if cfg.param_dtype is not None:
+            p = jax.tree.map(
+                lambda x: x.astype(cfg.param_dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
+        return p, a
+
+    def _dec_layout(self):
+        cfg = self.cfg
+        if cfg.num_encoder_layers:
+            return ["xattn"] * cfg.num_layers
+        return cfg.layout()
+
+    # --------------------------------------------------------------- forward
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens, cfg.dtype)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, cfg.dtype)
+        return x
+
+    def encode(self, params, enc_feats: jnp.ndarray) -> jnp.ndarray:
+        """Stubbed frontend features (B, S, F) -> encoder output (B, S, d)."""
+        cfg = self.cfg
+        x = frontends.apply_adapter(params["enc_adapter"], enc_feats, cfg.dtype)
+        b, s = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x, _, _ = apply_stacks(params["enc_stacks"], cfg,
+                               ["enc"] * cfg.num_encoder_layers, x, pos)
+        return layers.apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def enc_kvs(self, params, enc_out: jnp.ndarray):
+        """Precompute per-decoder-layer cross-attention K/V (stacked)."""
+        cfg = self.cfg
+        out = []
+        for p_list in params["stacks"]:
+            st = []
+            for pp in p_list:
+                # pp leaves have a leading 'layers' dim; vmap cross_kv over it
+                st.append(jax.vmap(lambda q: cross_kv(q, enc_out))(pp))
+            out.append(st)
+        return out
+
+    def hidden_states(self, params, tokens: jnp.ndarray, *,
+                      prefix_emb: Optional[jnp.ndarray] = None,
+                      enc_kvs=None, caches=None,
+                      positions: Optional[jnp.ndarray] = None,
+                      decode: bool = False):
+        """tokens (B, T) -> hidden (B, T(+P), d).  Returns (h, caches, aux)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        if prefix_emb is not None:
+            pe = frontends.apply_adapter(params["vis_adapter"], prefix_emb,
+                                         cfg.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+        b, t = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                         (b, t))
+        x, caches, aux = apply_stacks(params["stacks"], cfg, self._dec_layout(),
+                                      x, positions, caches, enc_kvs, decode)
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        return x, caches, aux
+
+    # ------------------------------------------------------------------ head
+    def oaa_logits(self, params, h: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], h)
+        else:
+            logits = layers.dense(params["lm_head"], h)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        return logits
+
+    def mach_logits(self, params, h: jnp.ndarray) -> jnp.ndarray:
+        return self.head.apply(params["mach_head"], h)      # (..., R, B)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch: dict):
+        """batch: tokens (B, L+1) int32; optional weights (B, L),
+        enc_feats (B, S, F), prefix_feats (B, P, F)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        weights = batch.get("weights")
+        if weights is None:
+            weights = jnp.ones(labels.shape, jnp.float32)
+
+        enc_kvs = None
+        if cfg.num_encoder_layers:
+            enc_out = self.encode(params, batch["enc_feats"])
+            enc_kvs = self.enc_kvs(params, enc_out)
+        prefix = batch.get("prefix_feats")
+
+        h, _, aux = self.hidden_states(params, inputs, prefix_emb=prefix,
+                                       enc_kvs=enc_kvs)
+        if prefix is not None:
+            h = h[:, prefix.shape[1]:]                      # predict text only
+
+        if cfg.mach is not None:
+            logits = self.mach_logits(params, h)            # (B, T, R, Bk)
+            hashed = jnp.moveaxis(cfg.mach.hash_labels(labels), 0, -1)
+            per_tok = ops.mach_xent(logits, hashed)          # (B, T)
+        else:
+            logits = self.oaa_logits(params, h).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            # label pick via one-hot contraction, NOT take_along_axis: a
+            # gather on the vocab-sharded logits would force XLA to
+            # all-gather the full (B, T, V) f32 tensor per device; the
+            # one-hot product-sum stays sharded on V end to end.
+            onehot = jax.nn.one_hot(labels, cfg.vocab_size,
+                                    dtype=logits.dtype)
+            picked = jnp.sum(logits * onehot, axis=-1)
+            per_tok = logz - picked
+        denom = jnp.maximum(jnp.sum(weights), 1.0)
+        loss = jnp.sum(per_tok * weights) / denom
+        total = loss
+        metrics = {"loss": loss, "tokens": jnp.sum(weights)}
+        if cfg.num_experts:
+            total = total + cfg.lb_loss_coef * aux["load_balance"] \
+                + cfg.z_loss_coef * aux["router_z"]
+            metrics.update(aux)
+        return total, metrics
+
+    # --------------------------------------------------------------- serving
+    def init_caches(self, batch_size: int, max_len: int):
+        """Build the decode cache pytree mirroring the stack nesting."""
+        cfg = self.cfg
+        layout = self._dec_layout()
+        stacks = plan_stacks(layout)
+        caches = []
+        hd = cfg.resolved_head_dim
+        for period, n in stacks:
+            st = []
+            for kind in period:
+                st.append(_init_kind_cache(cfg, kind, n, batch_size, max_len, hd))
+            caches.append(st)
+        return caches
+
+    def prefill(self, params, batch: dict, max_len: int):
+        """Process the prompt; returns (caches, enc_kvs, last_hidden (B, d))."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        enc_kvs = None
+        if cfg.num_encoder_layers:
+            enc_out = self.encode(params, batch["enc_feats"])
+            enc_kvs = self.enc_kvs(params, enc_out)
+        prefix = batch.get("prefix_feats")
+        caches = self.init_caches(b, max_len)
+        h, caches, _ = self.hidden_states(params, tokens, prefix_emb=prefix,
+                                          enc_kvs=enc_kvs, caches=caches)
+        return caches, enc_kvs, h[:, -1]
+
+    def decode_step(self, params, caches, enc_kvs, tokens: jnp.ndarray,
+                    pos: jnp.ndarray):
+        """One token step.  tokens (B,), pos (B,) absolute positions.
+        Returns (caches, hidden (B, d))."""
+        h, caches, _ = self.hidden_states(
+            params, tokens[:, None], enc_kvs=enc_kvs, caches=caches,
+            positions=pos[:, None], decode=True)
+        return caches, h[:, 0]
+
+    def next_token(self, params, hidden: jnp.ndarray):
+        """Greedy next token from final hidden states (B, d).
+        MACH path: fused decode kernel (never materializes (B, V))."""
+        cfg = self.cfg
+        if cfg.mach is not None:
+            logits = self.mach_logits(params, hidden)        # (B, R, Bk)
+            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            fam = cfg.mach.family
+            if getattr(fam, "inline_kernel_ok", False):
+                val, idx = ops.mach_top1(
+                    probs, num_classes=cfg.vocab_size,
+                    inline_coeffs=jnp.asarray(fam.coeffs()),
+                    inline_shift=fam.shift)
+            else:
+                val, idx = ops.mach_top1(probs, cfg.mach.table(),
+                                         num_classes=cfg.vocab_size)
+            return idx, val
+        logits = self.oaa_logits(params, hidden)
+        idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        val = jnp.max(logits, axis=-1)
+        return idx, val
+
+    def sample_token(self, params, hidden: jnp.ndarray, key: jax.Array,
+                     *, temperature: float = 1.0, top_k: int = 50):
+        """Top-k temperature sampling from final hidden states (B, d).
+
+        MACH path: class scores come from the paper's unbiased estimator
+        (Eq. 2 is affine in the summed scores, so sampling over the
+        softmax of summed scores / temperature is the MACH analogue of
+        sampling the full softmax)."""
+        cfg = self.cfg
+        if cfg.mach is not None:
+            logits = self.mach_logits(params, hidden)
+            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            scores = ops.mach_scores(probs, cfg.mach.table())   # (B, V)
+        else:
+            scores = self.oaa_logits(params, hidden).astype(jnp.float32)
+        vals, idxs = jax.lax.top_k(scores, top_k)               # (B, k)
+        gk = jax.random.categorical(key, vals / max(temperature, 1e-6))
+        picked = jnp.take_along_axis(idxs, gk[:, None], axis=-1)[:, 0]
+        return picked.astype(jnp.int32)
+
+
+def _init_kind_cache(cfg: ModelConfig, kind: str, n: int, batch: int,
+                     max_len: int, hd: int):
+    """Stacked (n, ...) cache for one period position."""
+    if kind in ("attn", "moe", "xattn", "attn_local"):
+        window = cfg.block_window(kind)
+        cap = min(max_len, window) if window else max_len
+        return attn_lib.KVCache(
+            k=jnp.zeros((n, batch, cap, cfg.num_kv_heads, hd), cfg.dtype),
+            v=jnp.zeros((n, batch, cap, cfg.num_kv_heads, hd), cfg.dtype),
+            positions=jnp.full((n, batch, cap), -1, jnp.int32),
+            index=jnp.zeros((n, batch), jnp.int32),
+        )
+    if kind == "rglru":
+        w = cfg.resolved_rnn_width
+        return recurrent.RecurrentState(
+            conv=jnp.zeros((n, batch, recurrent._CONV_W - 1, w), cfg.dtype),
+            h=jnp.zeros((n, batch, w), jnp.float32),
+        )
+    if kind == "mlstm":
+        di = int(cfg.d_model * cfg.mlstm_proj)
+        hdm = di // cfg.num_heads
+        return xlstm.MLSTMState(
+            c=jnp.zeros((n, batch, cfg.num_heads, hdm, hdm), jnp.float32),
+            n=jnp.zeros((n, batch, cfg.num_heads, hdm), jnp.float32),
+            m=jnp.full((n, batch, cfg.num_heads), -1e30, jnp.float32),
+        )
+    if kind == "slstm":
+        hds = cfg.d_model // cfg.num_heads
+        z = jnp.zeros((n, batch, cfg.num_heads, hds), jnp.float32)
+        return xlstm.SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 1e30)
+    raise ValueError(kind)

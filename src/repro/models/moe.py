@@ -1,0 +1,135 @@
+"""Mixture-of-Experts substrate (mixtral-8x22b, qwen2-moe-a2.7b).
+
+GShard-style top-k capacity routing, implemented as einsums so XLA SPMD
+can shard it (expert dim over the mesh 'model'/'data' axes induces the
+all-to-all automatically when divisible; otherwise expert weights are
+tensor-sharded on d_ff — "expert tensor parallelism" — which is always
+valid).
+
+Tokens are processed in groups of ``group_size`` via lax.scan so the
+(S, E, C) dispatch one-hot never exceeds ~10 MB regardless of batch —
+the standard trick for bounding dispatch memory (C grows linearly with
+S, so the live tensor is quadratic in group size).
+
+Aux losses: switch-style load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_moe(key, d_model: int, moe_d_ff: int, num_experts: int,
+             num_shared_experts: int = 0, shared_d_ff: int = 0,
+             activation: str = "swiglu"):
+    kg, k1, k2, k3, ks, kgs = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["router"], a["router"] = layers.init_dense(
+        kg, d_model, (num_experts,), "embed", (None,))
+    gated = activation in ("swiglu", "geglu")
+    shape_in = (num_experts, d_model, moe_d_ff)
+    p["wi"] = {"kernel": layers.truncated_normal_init(k1, shape_in, 1.0)}
+    a["wi"] = {"kernel": ("experts", "embed", "mlp")}
+    if gated:
+        p["wg"] = {"kernel": layers.truncated_normal_init(k2, shape_in, 1.0)}
+        a["wg"] = {"kernel": ("experts", "embed", "mlp")}
+    p["wo"] = {"kernel": layers.truncated_normal_init(
+        k3, (num_experts, moe_d_ff, d_model), 1.0)}
+    a["wo"] = {"kernel": ("experts", "mlp", "embed")}
+    if num_shared_experts:
+        p["shared"], a["shared"] = layers.init_mlp(
+            ks, d_model, shared_d_ff, activation)
+        p["shared_gate"], a["shared_gate"] = layers.init_dense(
+            kgs, d_model, (1,), "embed", (None,))
+    return p, a
+
+
+def _expert_ffn(params, xe: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """xe: (E, C, d) -> (E, C, d), batched over experts."""
+    wi = params["wi"]["kernel"].astype(xe.dtype)
+    wo = params["wo"]["kernel"].astype(xe.dtype)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    if activation == "swiglu":
+        wg = params["wg"]["kernel"].astype(xe.dtype)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * h
+    elif activation == "geglu":
+        wg = params["wg"]["kernel"].astype(xe.dtype)
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, wg)) * h
+    else:
+        h = layers.ACT[activation](h)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def apply_moe(params, x: jnp.ndarray, *, num_experts: int, top_k: int,
+              activation: str = "swiglu", capacity_factor: float = 1.25,
+              group_size: int = 1024,
+              renormalize: bool = True) -> tuple[jnp.ndarray, dict]:
+    """x: (B, T, d) -> (y (B, T, d), aux losses dict)."""
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    s = min(group_size, n)
+    # pad to a multiple of the group size
+    pad = -n % s
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    g = xf.shape[0] // s
+    xg = xf.reshape(g, s, d)
+    cap = max(1, int(s * top_k * capacity_factor / num_experts))
+
+    router = params["router"]["kernel"]
+
+    def group_body(_, xs):
+        xt = xs                                              # (S, d) bf16
+        # router math on the small (S, E) tensor in f32; xt itself stays
+        # in storage dtype (an .astype(f32) here would copy every token)
+        logits = jnp.einsum("sd,de->se", xt, router.astype(xt.dtype),
+                            preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, top_k)    # (S, K)
+        if renormalize:
+            gate_vals = gate_vals / jnp.maximum(
+                jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+        # one-hot (S, K, E); position of each token within its expert queue
+        oh = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.float32)
+        pos = jnp.cumsum(oh.reshape(s * top_k, num_experts), axis=0) \
+            .reshape(s, top_k, num_experts) * oh - 1.0       # (S, K, E)
+        keep = (pos < cap) & (oh > 0)
+        pos_cap = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=xt.dtype)
+        # dispatch (S, E, C) and combine (S, E, C) in storage dtype: both
+        # are one-hot selections (<= top_k nonzeros per row), so low
+        # precision loses nothing
+        dispatch = jnp.einsum("ske,skec->sec",
+                              (oh * keep).astype(xt.dtype), pos_cap)
+        combine = jnp.einsum("sk,ske,skec->sec",
+                             gate_vals.astype(xt.dtype),
+                             (oh * keep).astype(xt.dtype), pos_cap)
+        xe = jnp.einsum("sd,sec->ecd", xt, dispatch)
+        ye = _expert_ffn(params, xe, activation)             # (E, C, d)
+        y = jnp.einsum("ecd,sec->sd", ye, combine)
+        # switch load-balance loss terms
+        density = jnp.mean(oh[:, 0], axis=0)                 # top-1 fraction
+        density_prob = jnp.mean(probs, axis=0)
+        lb = num_experts * jnp.sum(density * density_prob)
+        z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        return None, (y, lb, z)
+
+    # remat the per-group body: differentiating the group scan otherwise
+    # stacks every group's (E, C, f) expert activations as saved
+    # residuals — 10s of GB at mixtral scale; recomputing them in the
+    # backward pass costs ~1 extra forward of the MoE FFN.
+    _, (yg, lb, z) = jax.lax.scan(jax.checkpoint(group_body), None, xg)
+    y = yg.reshape(g * s, d)[:n].reshape(b, t, d)
+
+    if "shared" in params:
+        sh = layers.apply_mlp(params["shared"], x, activation)
+        gate = jax.nn.sigmoid(layers.dense(params["shared_gate"], x))
+        y = y + sh * gate
+    aux = {"load_balance": jnp.mean(lb), "router_z": jnp.mean(z)}
+    return y, aux

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma substrate).
+
+Block layout (Griffin Fig. 2):
+    x ─ linear_y ─ GeLU ─────────────────────┐
+    x ─ linear_x ─ causal conv1d(4) ─ RG-LRU ┴ ⊙ ─ linear_out
+
+RG-LRU (paper eq. 1-4):
+    r_t = σ(W_a ξ_t);  i_t = σ(W_x ξ_t)
+    log a_t = −c · softplus(Λ) ⊙ r_t                 (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+The recurrence runs through ``kernels/ops.lru_scan`` (Pallas on TPU,
+associative scan elsewhere).  Decode carries (conv tail, h) as state —
+O(1) memory in sequence length, which is what qualifies recurrentgemma
+for the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+
+_C = 8.0
+_CONV_W = 4
+
+
+class RecurrentState(NamedTuple):
+    conv: jnp.ndarray   # (B, CONV_W-1, W) trailing inputs
+    h: jnp.ndarray      # (B, W) recurrence state
+
+
+def init_rglru_block(key, d_model: int, width: Optional[int] = None):
+    w = width or d_model
+    ky, kx, kc, ka, ki, ko, kl = jax.random.split(key, 7)
+    p, a = {}, {}
+    p["lin_y"], a["lin_y"] = layers.init_dense(ky, d_model, (w,), "embed", ("mlp",))
+    p["lin_x"], a["lin_x"] = layers.init_dense(kx, d_model, (w,), "embed", ("mlp",))
+    p["conv"] = {"w": layers.truncated_normal_init(kc, (_CONV_W, w), 1.0),
+                 "b": jnp.zeros((w,), jnp.float32)}
+    a["conv"] = {"w": (None, "mlp"), "b": ("mlp",)}
+    p["gate_a"], a["gate_a"] = layers.init_dense(ka, w, (w,), "mlp", ("mlp",))
+    p["gate_x"], a["gate_x"] = layers.init_dense(ki, w, (w,), "mlp", ("mlp",))
+    # Λ init so that a^(1/r) spans ~[0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(kl, (w,), jnp.float32, 0.9, 0.999)
+    p["lam"] = {"log": jnp.log(jnp.expm1(-jnp.log(u) / _C))}
+    a["lam"] = {"log": ("mlp",)}
+    p["lin_out"], a["lin_out"] = layers.init_dense(ko, w, (d_model,), "mlp", ("embed",))
+    return p, a
+
+
+def _causal_conv(params, x: jnp.ndarray, tail: Optional[jnp.ndarray]
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-channel causal conv, width 4.  x: (B, T, W).
+
+    tail: (B, 3, W) previous inputs (decode) or None (prefill from zero).
+    Returns (y, new_tail)."""
+    b, t, w = x.shape
+    if tail is None:
+        tail = jnp.zeros((b, _CONV_W - 1, w), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)   # (B, T+3, W)
+    y = jnp.zeros_like(x)
+    cw = params["w"].astype(x.dtype)
+    for i in range(_CONV_W):
+        y = y + xp[:, i:i + t] * cw[_CONV_W - 1 - i]
+    y = y + params["b"].astype(x.dtype)
+    return y, xp[:, -( _CONV_W - 1):]
+
+
+def _rglru(params, xi: jnp.ndarray, h0: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """xi: (B, T, W) conv output; h0: (B, W). Returns (h_seq, h_last)."""
+    r = jax.nn.sigmoid(layers.dense(params["gate_a"], xi).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(params["gate_x"], xi).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]["log"]) * r     # (B, T, W)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bterm = mult * i * xi.astype(jnp.float32)
+    h = ops.lru_scan(a, bterm, h0.astype(jnp.float32))
+    return h.astype(xi.dtype), h[:, -1].astype(jnp.float32)
+
+
+def apply_rglru_block(params, x: jnp.ndarray,
+                      state: Optional[RecurrentState] = None
+                      ) -> tuple[jnp.ndarray, RecurrentState]:
+    """x: (B, T, d_model) -> (y, new_state).  state=None starts at zero."""
+    b = x.shape[0]
+    w = params["lin_y"]["kernel"].shape[1]
+    ybr = jax.nn.gelu(layers.dense(params["lin_y"], x))
+    xbr = layers.dense(params["lin_x"], x)
+    tail = state.conv if state is not None else None
+    h0 = state.h if state is not None else jnp.zeros((b, w), jnp.float32)
+    xc, new_tail = _causal_conv(params["conv"], xbr, tail)
+    hseq, h_last = _rglru(params, xc, h0)
+    out = layers.dense(params["lin_out"], hseq * ybr)
+    return out, RecurrentState(conv=new_tail, h=h_last)
+
+
+def init_recurrent_state(batch: int, width: int, dtype=jnp.bfloat16
+                         ) -> RecurrentState:
+    return RecurrentState(
+        conv=jnp.zeros((batch, _CONV_W - 1, width), dtype),
+        h=jnp.zeros((batch, width), jnp.float32),
+    )

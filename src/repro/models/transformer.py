@@ -1,0 +1,379 @@
+"""Model assembly: ModelConfig, block dispatch, scanned stacks, LM classes.
+
+A model is a cycled ``block_pattern`` of block kinds:
+
+  attn        self-attention (+MLP)          — dense transformers
+  attn_local  sliding-window self-attention  — griffin local / SWA layers
+  moe         self-attention + MoE FFN       — mixtral / qwen2-moe
+  rglru       RG-LRU recurrent block (+MLP)  — recurrentgemma
+  mlstm/slstm xLSTM blocks                   — xlstm-350m
+  xattn       self + cross attention (+MLP)  — enc-dec decoder layers
+
+Layers are *scanned*: the cycled pattern is factored into maximal
+(pattern × n_periods) stacks whose parameters are stacked on a leading
+'layers' axis, and each stack runs as one ``lax.scan`` — compile time
+and HLO size stay O(pattern), not O(num_layers), which is what makes
+88-layer × 512-device dry-runs tractable.  ``remat`` wraps the scan body
+(full activation checkpointing).
+
+The output head is either the dense OAA softmax (paper baseline) or the
+MACH head (the paper's technique) — selected per-config via ``mach``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mach import MACHConfig, MACHOutputHead
+from repro.kernels import ops
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib, recurrent, xlstm
+from repro.sharding.partitioning import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    family: str = "dense"            # dense | moe | enc_dec | hybrid | xlstm | vlm
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention
+    attention_kind: str = "full"     # full | sliding_window
+    window: int = 4096               # SWA window (attention_kind=sliding_window)
+    local_window: int = 2048         # window for attn_local blocks
+    rope_theta: float = 10000.0
+    flash_threshold: int = 2048
+    chunk_q: int = 512
+    chunk_k: int = 1024
+    # block pattern (cycled over num_layers)
+    block_pattern: tuple = ("attn",)
+    # MoE
+    num_experts: int = 0
+    experts_top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    shared_d_ff: int = 0
+    moe_group_size: int = 1024
+    capacity_factor: float = 1.25
+    lb_loss_coef: float = 0.01
+    z_loss_coef: float = 1e-3
+    # enc-dec
+    num_encoder_layers: int = 0
+    # recurrent widths
+    rnn_width: int = 0               # 0 -> d_model
+    mlstm_proj: float = 2.0
+    # frontend stubs
+    frontend: Optional[str] = None   # audio | vision
+    num_prefix_tokens: int = 0       # vision patch count (prefix embeddings)
+    # head
+    mach: Optional[MACHConfig] = None
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    embed_scale: float = 1.0         # gemma-family: sqrt(d_model)
+    # numerics / structure
+    activation: str = "swiglu"
+    norm: str = "rmsnorm"
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = None          # None -> f32; full configs use bf16
+                                     # (+ f32 master weights in the optimizer)
+    remat: str = "full"              # none | full
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_rnn_width(self) -> int:
+        return self.rnn_width or self.d_model
+
+    def layout(self, n: Optional[int] = None) -> list:
+        n = n or self.num_layers
+        pat = self.block_pattern
+        return [pat[i % len(pat)] for i in range(n)]
+
+    def block_window(self, kind: str) -> Optional[int]:
+        if kind == "attn_local":
+            return self.local_window
+        if kind in ("attn", "moe", "xattn") and self.attention_kind == "sliding_window":
+            return self.window
+        return None
+
+    def param_count_estimate(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline term)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        per = {}
+        per["attn"] = d * hd * (self.num_heads * 2 + self.num_kv_heads * 2) \
+            + (3 if self.activation in ("swiglu", "geglu") else 2) * d * f + 2 * d
+        per["attn_local"] = per["attn"]
+        per["xattn"] = per["attn"] + d * hd * (self.num_heads + self.num_kv_heads * 2) + d
+        mo = self.moe_d_ff or f
+        per["moe"] = d * hd * (self.num_heads * 2 + self.num_kv_heads * 2) \
+            + self.num_experts * 3 * d * mo + d * self.num_experts \
+            + (3 * d * self.shared_d_ff if self.num_shared_experts else 0) + 2 * d
+        w = self.resolved_rnn_width
+        per["rglru"] = 3 * d * w + 2 * w * w + 5 * w \
+            + (3 if self.activation in ("swiglu", "geglu") else 2) * d * f + 2 * d
+        di = int(d * self.mlstm_proj)
+        hdm = di // self.num_heads
+        per["mlstm"] = d * 2 * di + 3 * di * self.num_heads * hdm \
+            + 2 * di * self.num_heads + di * d + 2 * d
+        hds = d // self.num_heads
+        per["slstm"] = 4 * d * d + 4 * self.num_heads * hds * hds \
+            + 3 * d * int(d * 4 / 3) + 2 * d
+        total = sum(per[k] for k in self.layout())
+        total += per["attn"] * self.num_encoder_layers
+        total += v * d                                    # embedding
+        if self.mach is not None:
+            total += d * self.mach.num_repetitions * self.mach.num_buckets
+        elif not self.tie_embeddings:
+            total += d * v
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = layers.init_norm(cfg.d_model, cfg.norm, "embed")
+    if kind in ("attn", "attn_local", "moe", "xattn", "enc"):
+        p["attn"], a["attn"] = attn_lib.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim)
+    if kind == "xattn":
+        p["norm_x"], a["norm_x"] = layers.init_norm(cfg.d_model, cfg.norm, "embed")
+        p["xattn"], a["xattn"] = attn_lib.init_attention(
+            k4, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim)
+    if kind == "rglru":
+        p["rglru"], a["rglru"] = recurrent.init_rglru_block(
+            k1, cfg.d_model, cfg.resolved_rnn_width)
+    if kind == "mlstm":
+        p["mlstm"], a["mlstm"] = xlstm.init_mlstm_block(
+            k1, cfg.d_model, cfg.num_heads, cfg.mlstm_proj)
+        return p, a                                   # no second MLP
+    if kind == "slstm":
+        p["slstm"], a["slstm"] = xlstm.init_slstm_block(
+            k1, cfg.d_model, cfg.num_heads)
+        return p, a
+    p["norm2"], a["norm2"] = layers.init_norm(cfg.d_model, cfg.norm, "embed")
+    if kind == "moe":
+        p["moe"], a["moe"] = moe_lib.init_moe(
+            k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts,
+            cfg.num_shared_experts, cfg.shared_d_ff, cfg.activation)
+    else:
+        p["mlp"], a["mlp"] = layers.init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                             cfg.activation)
+    return p, a
+
+
+def _self_attention(params, cfg: ModelConfig, x, positions, window,
+                    cache, causal=True):
+    """Returns (attn_out, new_cache)."""
+    q = layers.dense(params["q"], x)
+    k = layers.dense(params["k"], x)
+    v = layers.dense(params["v"], x)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        out = attn_lib.attend(q, k, v, positions, positions, causal=causal,
+                              window=window,
+                              flash_threshold=cfg.flash_threshold,
+                              chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+        new_cache = None
+    elif x.shape[1] > 1:                      # prefill into cache
+        new_cache = attn_lib.cache_update_prefill(cache, k, v, positions)
+        out = attn_lib.attend(q, k, v, positions, positions, causal=causal,
+                              window=window,
+                              flash_threshold=cfg.flash_threshold,
+                              chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+    else:                                     # single-token decode
+        ring = window is not None and cache.capacity <= window
+        new_cache = attn_lib.cache_update_decode(cache, k, v, ring)
+        out = attn_lib.decode_attend(q, new_cache, window=window)
+    o = params["o"]["kernel"].astype(out.dtype)
+    return jax.lax.dot_general(out, o, (((2, 3), (0, 1)), ((), ()))), new_cache
+
+
+def _cross_attention(params, cfg: ModelConfig, x, enc_kv):
+    """enc_kv: (k, v) precomputed from encoder output."""
+    q = layers.dense(params["q"], x)
+    k, v = enc_kv
+    b, t = x.shape[:2]
+    s = k.shape[1]
+    q_pos = jnp.zeros((b, t), jnp.int32)
+    k_pos = jnp.zeros((b, s), jnp.int32)
+    out = attn_lib.attend(q, k, v, q_pos, k_pos, causal=False, window=None,
+                          flash_threshold=cfg.flash_threshold,
+                          chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+    o = params["o"]["kernel"].astype(out.dtype)
+    return jax.lax.dot_general(out, o, (((2, 3), (0, 1)), ((), ())))
+
+
+def cross_kv(params_block, x_enc):
+    """Precompute cross-attention K/V from encoder output (per xattn block)."""
+    k = layers.dense(params_block["xattn"]["k"], x_enc)
+    v = layers.dense(params_block["xattn"]["v"], x_enc)
+    return k, v
+
+
+def apply_block(params, cfg: ModelConfig, kind: str, x, positions,
+                cache=None, enc_kv=None, decode: bool = False):
+    """Pre-norm residual block.  Returns (x, new_cache, aux)."""
+    aux = {}
+    h = layers.apply_norm(params["norm1"], x, cfg.norm)
+    window = cfg.block_window(kind)
+    if kind in ("attn", "attn_local", "moe", "enc", "xattn"):
+        out, new_cache = _self_attention(params["attn"], cfg, h, positions,
+                                         window, cache,
+                                         causal=(kind != "enc"))
+        x = x + out
+        if kind == "xattn":
+            hx = layers.apply_norm(params["norm_x"], x, cfg.norm)
+            x = x + _cross_attention(params["xattn"], cfg, hx, enc_kv)
+    elif kind == "rglru":
+        out, new_cache = recurrent.apply_rglru_block(params["rglru"], h, cache)
+        x = x + out
+    elif kind == "mlstm":
+        out, new_cache = xlstm.apply_mlstm_block(params["mlstm"], h, cache,
+                                                 decode=decode)
+        return x + out, new_cache, aux
+    elif kind == "slstm":
+        out, new_cache = xlstm.apply_slstm_block(params["slstm"], h, cache,
+                                                 decode=decode)
+        return x + out, new_cache, aux
+    else:
+        raise ValueError(kind)
+
+    h2 = layers.apply_norm(params["norm2"], x, cfg.norm)
+    if kind == "moe":
+        out2, aux = moe_lib.apply_moe(
+            params["moe"], h2, num_experts=cfg.num_experts,
+            top_k=cfg.experts_top_k, activation=cfg.activation,
+            capacity_factor=cfg.capacity_factor,
+            group_size=cfg.moe_group_size)
+    else:
+        out2 = layers.apply_mlp(params["mlp"], h2, cfg.activation)
+    return x + out2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked scan over cycled patterns
+# ---------------------------------------------------------------------------
+
+def plan_stacks(layout: list) -> list:
+    """Factor the layer layout into [(period_kinds, n_periods), ...]."""
+    if not layout:
+        return []
+    # find the cycled pattern length = position where layout repeats
+    pat_len = 1
+    for pl in range(1, len(layout) + 1):
+        if all(layout[i] == layout[i % pl] for i in range(len(layout))):
+            pat_len = pl
+            break
+    n_full = len(layout) // pat_len
+    stacks = []
+    if n_full:
+        stacks.append((tuple(layout[:pat_len]), n_full))
+    rem = layout[n_full * pat_len:]
+    if rem:
+        stacks.append((tuple(rem), 1))
+    return stacks
+
+
+def init_stacks(key, cfg: ModelConfig, layout: list):
+    """Returns (params, axes): list over stacks of list over period
+    positions of stacked block params."""
+    stacks = plan_stacks(layout)
+    params, axes = [], []
+    keys = jax.random.split(key, len(stacks))
+    for (period, n), sk in zip(stacks, keys):
+        pos_keys = jax.random.split(sk, len(period))
+        p_list, a_list = [], []
+        for kind, pk in zip(period, pos_keys):
+            if n == 1:
+                p, a = init_block(pk, cfg, kind)
+                p = jax.tree.map(lambda x: x[None], p)
+                a = jax.tree.map(lambda ax: ("layers",) + tuple(ax), a,
+                                 is_leaf=lambda v: isinstance(v, tuple))
+            else:
+                p, a = layers.stack_inits(
+                    functools.partial(init_block, cfg=cfg, kind=kind), pk, n)
+            p_list.append(p)
+            a_list.append(a)
+        params.append(p_list)
+        axes.append(a_list)
+    return params, axes
+
+
+def apply_stacks(params, cfg: ModelConfig, layout: list, x, positions,
+                 caches=None, enc_kvs=None, decode: bool = False):
+    """Run all stacks.  caches/enc_kvs mirror the params nesting.
+    Returns (x, new_caches, aux_sums)."""
+    stacks = plan_stacks(layout)
+    new_caches = []
+    aux_sum = {"load_balance": 0.0, "router_z": 0.0}
+
+    for si, ((period, n), p_list) in enumerate(zip(stacks, params)):
+        st_caches = caches[si] if caches is not None else None
+        st_enc = enc_kvs[si] if enc_kvs is not None else None
+
+        def body(carry, xs, period=period):
+            x = carry
+            layer_params, layer_caches, layer_enc = xs
+            new_lc = []
+            laux = {"load_balance": 0.0, "router_z": 0.0}
+            for pi, kind in enumerate(period):
+                c = layer_caches[pi] if layer_caches is not None else None
+                ek = layer_enc[pi] if layer_enc is not None else None
+                x, nc, aux = apply_block(layer_params[pi], cfg, kind, x,
+                                         positions, c, ek, decode)
+                # residual-stream sharding (DP on batch; + SP over 'model'
+                # on seq when the active rules enable it) — no-op outside
+                # an activate() context
+                x = constrain(x, ("batch", "seq", None))
+                new_lc.append(nc)
+                for k2 in laux:
+                    laux[k2] = laux[k2] + aux.get(k2, 0.0)
+            return x, (new_lc, laux)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+
+        use_scan = cfg.scan_layers and n > 1
+        if use_scan:
+            xs = (p_list, st_caches, st_enc)
+            x, (nc, laux) = jax.lax.scan(body, x, xs)
+            aux_sum = {k2: aux_sum[k2] + jnp.sum(laux[k2]) for k2 in aux_sum}
+            new_caches.append(nc)
+        else:
+            nc_layers = None
+            for li in range(n):
+                lp = jax.tree.map(lambda v: v[li], p_list)
+                lc = (jax.tree.map(lambda v: v[li], st_caches)
+                      if st_caches is not None else None)
+                le = (jax.tree.map(lambda v: v[li], st_enc)
+                      if st_enc is not None else None)
+                x, (nc, laux) = body(x, (lp, lc, le))
+                aux_sum = {k2: aux_sum[k2] + laux[k2] for k2 in aux_sum}
+                if caches is not None:
+                    nc_exp = jax.tree.map(lambda v: v[None], nc)
+                    nc_layers = nc_exp if nc_layers is None else jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b], 0),
+                        nc_layers, nc_exp)
+            new_caches.append(nc_layers)
+    return x, (new_caches if caches is not None else None), aux_sum

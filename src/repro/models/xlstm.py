@@ -1,0 +1,304 @@
+"""xLSTM blocks (xlstm-350m substrate): mLSTM and sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating; attention-free.
+  Parallel (training/prefill) form, stabilized as in the xLSTM paper:
+     logD[t,s] = Σ_{j=s+1..t} log f_j + log i_s          (s ≤ t)
+     m_t = max_s logD[t,s]
+     S[t,s] = (q_t·k_s/√d) · exp(logD[t,s] − m_t)
+     h_t = Σ_s S[t,s] v_s / max(|Σ_s S[t,s]|, exp(−m_t))
+  Recurrent (decode) form:
+     C_t = f̄ C_{t−1} + ī v k^T;  n_t = f̄ n_{t−1} + ī k
+     m_t = max(log f + m_{t−1}, log i);  f̄ = e^{log f + m_{t−1} − m_t}, ī = e^{log i − m_t}
+     h_t = C_t q / max(|n_t·q|, exp(−m_t))
+  The two forms are algebraically identical (tested).
+
+sLSTM — scalar-memory LSTM with recurrent memory mixing (block-diagonal
+  per-head R matrices); *inherently sequential*, runs as lax.scan for
+  any T, one step for decode.
+
+Both blocks follow the paper's pre-LN residual structure; the mLSTM
+block has an (up → gate → down) projection shell (proj factor 2), the
+sLSTM block a gated-FFN shell (proj factor 4/3 ≈ "ffn_proj").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, hd, hd) matrix memory
+    n: jnp.ndarray   # (B, H, hd) normalizer
+    m: jnp.ndarray   # (B, H) stabilizer
+
+
+def init_mlstm_block(key, d_model: int, num_heads: int, proj_factor: float = 2.0):
+    di = int(d_model * proj_factor)
+    hd = di // num_heads
+    ku, kq, kk, kv, ki, kf, ko, kd = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["up"], a["up"] = layers.init_dense(ku, d_model, (2 * di,), "embed", ("mlp",))
+    p["q"], a["q"] = layers.init_dense(kq, di, (num_heads, hd), "mlp", ("heads", "qkv"))
+    p["k"], a["k"] = layers.init_dense(kk, di, (num_heads, hd), "mlp", ("heads", "qkv"))
+    p["v"], a["v"] = layers.init_dense(kv, di, (num_heads, hd), "mlp", ("heads", "qkv"))
+    p["igate"], a["igate"] = layers.init_dense(ki, di, (num_heads,), "mlp", ("heads",))
+    p["fgate"], a["fgate"] = layers.init_dense(kf, di, (num_heads,), "mlp", ("heads",))
+    # forget bias init positive so early training doesn't wash memory
+    p["gate_bias"] = {"i": jnp.zeros((num_heads,), jnp.float32),
+                      "f": jnp.full((num_heads,), 3.0, jnp.float32)}
+    a["gate_bias"] = {"i": ("heads",), "f": ("heads",)}
+    p["ln_inner"], a["ln_inner"] = layers.init_norm(di, "rmsnorm", "mlp")
+    p["down"], a["down"] = layers.init_dense(kd, di, (d_model,), "mlp", ("embed",))
+    return p, a
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """q/k/v: (B, T, H, hd); log_i/log_f: (B, T, H) -> h: (B, T, H, hd)."""
+    b, t, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    clf = jnp.cumsum(log_f, axis=1)                       # (B, T, H)
+    # logD[t, s] = clf[t] - clf[s] + log_i[s], s <= t
+    logd = clf[:, :, None, :] - clf[:, None, :, :] + log_i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((t, t), bool))
+    logd = jnp.where(tri[None, :, :, None], logd, -jnp.inf)   # (B,T,S,H)
+    m = jnp.max(logd, axis=2)                             # (B, T, H)
+    d = jnp.exp(logd - m[:, :, None, :])
+    s = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32)) * d
+    norm = jnp.maximum(jnp.abs(jnp.sum(s, axis=2)), jnp.exp(-m))  # (B,T,H)
+    out = jnp.einsum("btsh,bshd->bthd", s, v.astype(jnp.float32))
+    return (out / norm[..., None]).astype(q.dtype)
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state: MLSTMState,
+                     chunk: int = 256):
+    """Chunkwise-parallel mLSTM: O(T·chunk) memory instead of O(T²).
+
+    Within each chunk the stabilized quadratic form runs in parallel;
+    across chunks the (C, n, m) recurrent state is carried — the exact
+    same semantics as the per-step recurrence (tested), which is what
+    makes 32k-token prefill feasible (the pure quadratic form would
+    materialize a (B, 32k, 32k, H) tensor).
+
+    q/k/v: (B, T, H, hd); log_i/log_f: (B, T, H); T % chunk == 0.
+    Returns (h (B, T, H, hd), final MLSTMState).
+    """
+    b, t, h, hd = q.shape
+    nc = t // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    def resh4(x):
+        return jnp.moveaxis(x.reshape(b, nc, chunk, h, hd), 1, 0)
+
+    def resh3(x):
+        return jnp.moveaxis(x.reshape(b, nc, chunk, h), 1, 0)
+
+    qs, ks, vs = resh4(q), resh4(k), resh4(v)
+    lis, lfs = resh3(log_i), resh3(log_f)
+
+    def qs_cast(x):
+        return x.astype(jnp.float32)
+
+    def chunk_body(st, xs):
+        qc, kc, vc, li, lf = xs                   # (B, ck, H, ...)
+        clf = jnp.cumsum(lf, axis=1)              # (B, ck, H)
+        # intra-chunk log decay matrix
+        logd = clf[:, :, None, :] - clf[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logd = jnp.where(tri[None, :, :, None], logd, -jnp.inf)
+        intra_max = jnp.max(logd, axis=2)         # (B, ck, H)
+        w_inter = clf + st.m[:, None, :]          # (B, ck, H)
+        m_t = jnp.maximum(intra_max, w_inter)
+        d = jnp.exp(logd - m_t[:, :, None, :])
+        inter = jnp.exp(w_inter - m_t)            # (B, ck, H)
+
+        qf = qs_cast(qc) * scale
+        s = jnp.einsum("bthd,bshd->btsh", qf, qs_cast(kc)) * d
+        num = jnp.einsum("btsh,bshd->bthd", s, qs_cast(vc)) \
+            + inter[..., None] * jnp.einsum("bhij,bthi->bthj", st.c, qf)
+        den_sum = jnp.sum(s, axis=2) \
+            + inter * jnp.einsum("bhi,bthi->bth", st.n, qf)
+        den = jnp.maximum(jnp.abs(den_sum), jnp.exp(-m_t))
+        hout = num / den[..., None]
+
+        # end-of-chunk state
+        wlog = clf[:, -1:, :] - clf + li          # (B, ck, H)
+        m_new = jnp.maximum(jnp.max(wlog, axis=1),
+                            clf[:, -1] + st.m)    # (B, H)
+        wk = jnp.exp(wlog - m_new[:, None, :])
+        carry_scale = jnp.exp(clf[:, -1] + st.m - m_new)
+        c_new = jnp.einsum("bsh,bshi,bshj->bhij", wk, qs_cast(kc),
+                           qs_cast(vc)) \
+            + carry_scale[..., None, None] * st.c
+        n_new = jnp.einsum("bsh,bshd->bhd", wk, qs_cast(kc)) \
+            + carry_scale[..., None] * st.n
+        return MLSTMState(c_new, n_new, m_new), hout
+
+    st, hs = jax.lax.scan(chunk_body, state, (qs, ks, vs, lis, lfs))
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, t, h, hd)
+    return hseq.astype(q.dtype), st
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, log_i, log_f):
+    """One decode step. q/k/v: (B, H, hd); log gates: (B, H)."""
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    m_new = jnp.maximum(log_f + state.m, log_i)           # (B, H)
+    fbar = jnp.exp(log_f + state.m - m_new)[..., None]
+    ibar = jnp.exp(log_i - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = state.c * fbar[..., None] + ibar[..., None] * vf[..., None, :] * kf[..., :, None]
+    n = state.n * fbar + ibar * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhij,bhi->bhj", c, qf)              # (B, H, hd)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return MLSTMState(c, n, m_new), h
+
+
+def apply_mlstm_block(params, x: jnp.ndarray,
+                      state: Optional[MLSTMState] = None,
+                      decode: bool = False):
+    """x: (B, T, d) -> (y, new_state).  decode=True requires T == 1."""
+    b, t, _ = x.shape
+    nh = params["igate"]["kernel"].shape[1]
+    up = layers.dense(params["up"], x)
+    di = up.shape[-1] // 2
+    xm, z = up[..., :di], up[..., di:]
+    q = layers.dense(params["q"], xm)
+    k = layers.dense(params["k"], xm) / math.sqrt(q.shape[-1])
+    v = layers.dense(params["v"], xm)
+    log_i = (layers.dense(params["igate"], xm).astype(jnp.float32)
+             + params["gate_bias"]["i"])
+    log_f = jax.nn.log_sigmoid(
+        layers.dense(params["fgate"], xm).astype(jnp.float32)
+        + params["gate_bias"]["f"])
+    if decode:
+        if state is None:
+            hd = q.shape[-1]
+            state = init_mlstm_state(b, nh, hd)
+        state, h1 = _mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                log_i[:, 0], log_f[:, 0])
+        h = h1[:, None]
+    else:
+        if state is None:
+            state = init_mlstm_state(b, nh, q.shape[-1])
+        chunk = 256
+        if t > chunk and t % chunk == 0:
+            h, state = _mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk)
+        elif t % 64 == 0 and t > 64:
+            h, state = _mlstm_chunkwise(q, k, v, log_i, log_f, state, 64)
+        else:
+            h, state = _mlstm_chunkwise(q, k, v, log_i, log_f, state, t)
+    h = h.reshape(b, t, di)
+    h = layers.apply_norm(params["ln_inner"], h, "rmsnorm")
+    out = layers.dense(params["down"], h * jax.nn.silu(z))
+    return out, state
+
+
+def init_mlstm_state(batch: int, num_heads: int, head_dim: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        n=jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+        m=jnp.full((batch, num_heads), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, hd) cell
+    n: jnp.ndarray   # (B, H, hd) normalizer
+    h: jnp.ndarray   # (B, H, hd) hidden (memory mixing input)
+    m: jnp.ndarray   # (B, H, hd) stabilizer
+
+
+def init_slstm_block(key, d_model: int, num_heads: int,
+                     ffn_factor: float = 4.0 / 3.0):
+    hd = d_model // num_heads
+    kz, ki, kf, ko, kr, kffn = jax.random.split(key, 6)
+    p, a = {}, {}
+    for name, kk in (("wz", kz), ("wi", ki), ("wf", kf), ("wo", ko)):
+        p[name], a[name] = layers.init_dense(kk, d_model, (num_heads, hd),
+                                             "embed", ("heads", "qkv"))
+    # block-diagonal recurrent mixing: (4 gates, H, hd, hd)
+    p["r"] = {"kernel": layers.truncated_normal_init(kr, (4, num_heads, hd, hd),
+                                                     1.0)}
+    a["r"] = {"kernel": (None, "heads", "qkv", None)}
+    p["gate_bias"] = {"i": jnp.zeros((num_heads, hd), jnp.float32),
+                      "f": jnp.full((num_heads, hd), 3.0, jnp.float32),
+                      "z": jnp.zeros((num_heads, hd), jnp.float32),
+                      "o": jnp.zeros((num_heads, hd), jnp.float32)}
+    a["gate_bias"] = {k: ("heads", "qkv") for k in ("i", "f", "z", "o")}
+    p["ln_inner"], a["ln_inner"] = layers.init_norm(d_model, "rmsnorm", "embed")
+    dff = int(d_model * ffn_factor)
+    p["ffn"], a["ffn"] = layers.init_mlp(kffn, d_model, dff, "geglu")
+    return p, a
+
+
+def _slstm_step(params, state: SLSTMState, xz, xi, xf, xo):
+    """All inputs (B, H, hd)."""
+    r = params["r"]["kernel"].astype(jnp.float32)
+    hprev = state.h
+    mix = jnp.einsum("bhd,ghde->gbhe", hprev, r)      # (4, B, H, hd)
+    gb = params["gate_bias"]
+    z = jnp.tanh(xz + mix[0] + gb["z"])
+    log_i = xi + mix[1] + gb["i"]
+    log_f = jax.nn.log_sigmoid(xf + mix[2] + gb["f"])
+    o = jax.nn.sigmoid(xo + mix[3] + gb["o"])
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    fbar = jnp.exp(log_f + state.m - m_new)
+    ibar = jnp.exp(log_i - m_new)
+    c = fbar * state.c + ibar * z
+    n = jnp.maximum(fbar * state.n + ibar, 1e-6)
+    h = o * c / n
+    return SLSTMState(c=c, n=n, h=h, m=m_new), h
+
+
+def apply_slstm_block(params, x: jnp.ndarray,
+                      state: Optional[SLSTMState] = None,
+                      decode: bool = False):
+    """x: (B, T, d) -> (y, new_state).  Sequential scan over T."""
+    b, t, d = x.shape
+    nh, hd = params["wz"]["kernel"].shape[1:]
+    xz = layers.dense(params["wz"], x).astype(jnp.float32)
+    xi = layers.dense(params["wi"], x).astype(jnp.float32)
+    xf = layers.dense(params["wf"], x).astype(jnp.float32)
+    xo = layers.dense(params["wo"], x).astype(jnp.float32)
+    if state is None:
+        state = init_slstm_state(b, nh, hd)
+
+    if decode:
+        state, h = _slstm_step(params, state, xz[:, 0], xi[:, 0],
+                               xf[:, 0], xo[:, 0])
+        hseq = h[:, None]
+    else:
+        def step(st, inp):
+            st, h = _slstm_step(params, st, *inp)
+            return st, h
+        xs = tuple(jnp.moveaxis(u, 1, 0) for u in (xz, xi, xf, xo))
+        state, hs = jax.lax.scan(step, state, xs)
+        hseq = jnp.moveaxis(hs, 0, 1)                 # (B, T, H, hd)
+    hflat = hseq.reshape(b, -1, d).astype(x.dtype)
+    hflat = layers.apply_norm(params["ln_inner"], hflat, "rmsnorm")
+    out = hflat + layers.apply_mlp(params["ffn"], hflat, "geglu")
+    return out, state
+
+
+def init_slstm_state(batch: int, num_heads: int, head_dim: int) -> SLSTMState:
+    z = jnp.zeros((batch, num_heads, head_dim), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 1e30)

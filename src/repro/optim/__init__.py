@@ -1,0 +1,16 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adam, adamw,
+                                    apply_updates, make_optimizer, sgd)
+from repro.optim.schedules import (constant, linear_warmup, make_schedule,
+                                   warmup_cosine, warmup_rsqrt)
+from repro.optim.grad import (accumulate_grads, clip_by_global_norm,
+                              dequantize_8bit, global_norm,
+                              init_error_feedback, quantize_8bit,
+                              topk_compress)
+
+__all__ = [
+    "Optimizer", "sgd", "adam", "adamw", "adafactor", "apply_updates",
+    "make_optimizer", "constant", "linear_warmup", "warmup_cosine",
+    "warmup_rsqrt", "make_schedule", "accumulate_grads",
+    "clip_by_global_norm", "global_norm", "init_error_feedback",
+    "topk_compress", "quantize_8bit", "dequantize_8bit",
+]

@@ -1,0 +1,132 @@
+"""Gradient utilities: clipping, accumulation, compression.
+
+Gradient compression implements the distributed-optimization tricks for
+slow cross-pod (DCN) links:
+
+* ``topk_compress`` / ``topk_decompress`` — per-leaf magnitude top-k
+  sparsification with **error feedback** (the residual is carried and
+  added to the next step's gradient, preserving convergence — Stich et
+  al. 2018).
+* ``quantize_8bit`` / ``dequantize_8bit`` — per-leaf absmax int8
+  quantization (4× wire reduction vs f32, 2× vs bf16).
+
+These act on gradient pytrees *before* the cross-pod all-reduce; the
+within-pod reduce-scatter stays full-precision (ICI is not the
+bottleneck — see EXPERIMENTS.md §Roofline collective terms).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Accumulation (microbatching)
+# ---------------------------------------------------------------------------
+
+def accumulate_grads(loss_fn, params, batch, num_microbatches: int):
+    """Split the batch's leading dim into microbatches; lax.scan the
+    grad computation and average.  Returns ((loss, metrics), grads)."""
+    if num_microbatches <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        g_acc, loss_acc, metr_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+        metr_acc = (metrics if metr_acc is None
+                    else jax.tree.map(lambda a, b_: a + b_, metr_acc, metrics))
+        return (g_acc, loss_acc + loss, metr_acc), None
+
+    # first microbatch outside scan to seed metric structure
+    (loss0, metr0), g0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, jax.tree.map(lambda x: x[0], micro))
+    g0 = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), zero_g, g0)
+    rest = jax.tree.map(lambda x: x[1:], micro)
+    (g, loss, metr), _ = jax.lax.scan(body, (g0, loss0, metr0), rest)
+    n = float(num_microbatches)
+    g = jax.tree.map(lambda x: x / n, g)
+    metr = jax.tree.map(lambda x: x / n, metr)
+    return (loss / n, metr), g
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification with error feedback
+# ---------------------------------------------------------------------------
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any
+
+
+def init_error_feedback(params) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def topk_compress(grads: Any, ef: ErrorFeedbackState, fraction: float = 0.01
+                  ) -> tuple[Any, ErrorFeedbackState]:
+    """Keep the top-|fraction| entries (by magnitude) of each leaf;
+    accumulate the rest into the error-feedback residual."""
+
+    def per_leaf(g, r):
+        g = g.astype(jnp.float32) + r
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * fraction))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        kept = jnp.where(mask, g, 0.0)
+        return kept, g - kept
+
+    flat, tdef = jax.tree.flatten(grads)
+    res = tdef.flatten_up_to(ef.residual)
+    outs = [per_leaf(g, r) for g, r in zip(flat, res)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            ErrorFeedbackState(tdef.unflatten([o[1] for o in outs])))
+
+
+# ---------------------------------------------------------------------------
+# 8-bit absmax quantization
+# ---------------------------------------------------------------------------
+
+class Quantized(NamedTuple):
+    q: Any        # int8 payloads
+    scale: Any    # f32 per-leaf absmax scales
+
+
+def quantize_8bit(grads: Any) -> Quantized:
+    def per_leaf(g):
+        g = g.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8), s
+    flat, tdef = jax.tree.flatten(grads)
+    outs = [per_leaf(g) for g in flat]
+    return Quantized(tdef.unflatten([o[0] for o in outs]),
+                     tdef.unflatten([o[1] for o in outs]))
+
+
+def dequantize_8bit(qt: Quantized) -> Any:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qt.q, qt.scale)

@@ -1,0 +1,237 @@
+"""Optimizers, from scratch (no optax in this environment).
+
+API mirrors the (init_fn, update_fn) gradient-transformation style:
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees (checkpointable, shardable: moments inherit the
+parameter's logical axes — see sharding/partitioning.py).
+Implemented: sgd (+momentum), adam, adamw, adafactor (factored second
+moment — the memory-frugal choice for 100B+ models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+def _lr(lr: ScalarOrSchedule, count: jnp.ndarray) -> jnp.ndarray:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum)
+# ---------------------------------------------------------------------------
+
+class SGDState(NamedTuple):
+    count: jnp.ndarray
+    momentum: Any
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mom = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+               if momentum else None)
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        step_lr = _lr(lr, state.count)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.momentum, grads)
+            if nesterov:
+                upd = jax.tree.map(
+                    lambda m, g: -(step_lr * (momentum * m + g)), mom, grads)
+            else:
+                upd = jax.tree.map(lambda m: -step_lr * m, mom)
+        else:
+            mom = None
+            upd = jax.tree.map(lambda g: -step_lr * g, grads)
+        return upd, SGDState(state.count + 1, mom)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          mask: Optional[Callable[[Any], Any]] = None) -> Optimizer:
+    """AdamW with decoupled weight decay.
+
+    mask(params) -> pytree of bools selecting decayed leaves (default:
+    decay everything with ndim >= 2, i.e. skip norms/biases).
+    """
+    def default_mask(params):
+        return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        step_lr = _lr(lr, state.count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        decay_mask = (mask or default_mask)(params)
+        def upd(m, v, p, dm):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * jnp.where(dm, p.astype(jnp.float32), 0.0)
+            return -step_lr * u
+        updates = jax.tree.map(upd, mu, nu, params, decay_mask)
+        return updates, AdamState(count, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    vr: Any      # row factors (or full v for <2D leaves)
+    vc: Any      # col factors (None for <2D leaves)
+
+
+def adafactor(lr: ScalarOrSchedule, eps: float = 1e-30,
+              clip_threshold: float = 1.0, decay_rate: float = 0.8
+              ) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), no first moment; second moment
+    factored over the last two dims of ≥2-D leaves — O(n+m) not O(nm)
+    optimizer memory, the standard choice at 100 B+ parameters."""
+
+    def init(params):
+        def per_leaf_r(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, jnp.float32)
+        def per_leaf_c(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(per_leaf_r, params),
+                              jax.tree.map(per_leaf_c, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay_rate)
+        step_lr = _lr(lr, state.count)
+
+        def upd(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                nvr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                nvc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = nvr / jnp.maximum(
+                    jnp.mean(nvr, axis=-1, keepdims=True), eps)
+                v = r[..., None] * nvc[..., None, :]
+            else:
+                nvr = beta * vr + (1 - beta) * g2
+                nvc = vc
+                v = nvr
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -step_lr * u, nvr, nvc
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_vr = tdef.flatten_up_to(state.vr)
+        flat_vc = tdef.flatten_up_to(state.vc)
+        out = [upd(g, vr, vc) for g, vr, vc in zip(flat_g, flat_vr, flat_vc)]
+        updates = tdef.unflatten([o[0] for o in out])
+        nvr = tdef.unflatten([o[1] for o in out])
+        nvc = tdef.unflatten([o[2] for o in out])
+        return updates, AdafactorState(count, nvr, nvc)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision: f32 master weights for bf16 params
+# ---------------------------------------------------------------------------
+
+class MasterState(NamedTuple):
+    master: Any      # f32 copies of the (bf16) params
+    inner: Any
+
+
+def with_master_weights(opt: Optimizer) -> Optimizer:
+    """Keep f32 master copies in optimizer state; model params stay bf16
+    (halving FSDP all-gather volume and keeping the backward pass free of
+    f32 activation copies).  Updates are computed on the masters, then
+    re-quantized — tiny updates are never swallowed by bf16 rounding."""
+
+    def init(params):
+        master = jax.tree.map(
+            lambda p: p.astype(jnp.float32)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        return MasterState(master, opt.init(master))
+
+    def update(grads, state, params):
+        g32 = jax.tree.map(
+            lambda g: g.astype(jnp.float32)
+            if jnp.issubdtype(g.dtype, jnp.floating) else g, grads)
+        upd, inner = opt.update(g32, state.inner, state.master)
+        new_master = apply_updates(state.master, upd)
+        # delta in the *param* dtype: params == cast(old master), so this
+        # applies exactly the representable part of the master update
+        deltas = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype) - p, new_master, params)
+        return deltas, MasterState(new_master, inner)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: ScalarOrSchedule, *,
+                   master_weights: bool = False, **kw) -> Optimizer:
+    opt = {"sgd": sgd, "adam": adam, "adamw": adamw,
+           "adafactor": adafactor}[name](lr, **kw)
+    return with_master_weights(opt) if master_weights else opt

@@ -1,0 +1,42 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  end_value: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+        frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = end_value + 0.5 * (peak - end_value) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_rsqrt(peak: float, warmup_steps: int):
+    """Transformer-style inverse-sqrt decay."""
+    def fn(step):
+        s = step.astype(jnp.float32) + 1
+        w = max(1, warmup_steps)
+        return peak * jnp.minimum(s / w, jnp.sqrt(w / s))
+    return fn
+
+
+def make_schedule(name: str, **kw):
+    return {"constant": constant, "linear_warmup": linear_warmup,
+            "warmup_cosine": warmup_cosine, "warmup_rsqrt": warmup_rsqrt}[name](**kw)

@@ -1,0 +1,4 @@
+from repro.serving.engine import (ServeConfig, ServingEngine, make_decode_fn,
+                                  make_prefill_fn)
+
+__all__ = ["ServeConfig", "ServingEngine", "make_prefill_fn", "make_decode_fn"]

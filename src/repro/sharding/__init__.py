@@ -1,0 +1,7 @@
+from repro.sharding.partitioning import (ShardingRules, activate,
+                                         batch_shardings, constrain,
+                                         params_shardings, resolve_spec,
+                                         state_shardings)
+
+__all__ = ["ShardingRules", "activate", "batch_shardings", "constrain",
+           "params_shardings", "resolve_spec", "state_shardings"]

@@ -1,0 +1,203 @@
+"""Logical-axis partitioning: model code names axes, this module maps
+them onto the mesh.
+
+Rules are *candidate lists*; resolution checks (a) divisibility of the
+tensor dim by the mesh-axes product and (b) that no mesh axis is used
+twice within one PartitionSpec, falling back to replication for that
+dim.  This is what lets one rule set cover heads=96 (mistral: 16-way TP)
+and heads=10 (recurrentgemma: replicated heads, FSDP on d_model) without
+per-arch sharding code.
+
+Parallelism modes expressed purely through rules:
+  DP    batch -> ('pod', 'data')
+  TP    mlp/heads/vocab/mach_rb/experts -> 'model'
+  FSDP  embed (the d_model dim of weights) -> 'data'   [fsdp=True]
+  SP    seq -> 'model'                                 [sp=True, prefill]
+  EP    experts -> 'model' when E divisible (else expert-TP via mlp)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    fsdp: bool = True
+    sp: bool = False
+    mach_pod_parallel: bool = False   # MACH R-heads sharded over 'pod'
+
+    def table(self, mesh: Mesh) -> dict:
+        has_pod = "pod" in mesh.axis_names
+        batch = ("pod", "data") if has_pod else ("data",)
+        rules = {
+            "batch": [batch, ("data",), None],
+            "seq": [("model",), None] if self.sp else [None],
+            "embed": [("data",), None] if self.fsdp else [None],
+            "mlp": [("model",), None],
+            "heads": [("model",), None],
+            "kv_heads": [("model",), None],
+            "qkv": [None],
+            "vocab": [("model",), None],
+            "experts": [("model",), None],
+            "layers": [None],
+            None: [None],
+        }
+        if self.mach_pod_parallel and has_pod:
+            # R·B dim split over (pod, model): pods own disjoint subsets
+            # of the R repetitions — the paper's embarrassing parallelism
+            rules["mach_rb"] = [("pod", "model"), ("model",), None]
+        else:
+            rules["mach_rb"] = [("model",), None]
+        return rules
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (SP / residual-stream sharding).
+# Model code calls ``constrain(x, ("batch", "seq", None))`` with *logical*
+# names; outside an ``activate(mesh, rules)`` context it is a no-op, so
+# models stay mesh-agnostic.
+# ---------------------------------------------------------------------------
+
+_ACTIVE: list = []
+
+
+class activate:
+    def __init__(self, mesh: Mesh, rules_cfg: "ShardingRules"):
+        self.entry = (mesh, rules_cfg.table(mesh))
+
+    def __enter__(self):
+        _ACTIVE.append(self.entry)
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def constrain(x: jnp.ndarray, logical_axes) -> jnp.ndarray:
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = resolve_spec(mesh, rules, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(mesh: Mesh, rules: dict, logical_axes, shape) -> P:
+    """(logical axis names per dim, shape) -> PartitionSpec."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        choice = None
+        for cand in rules.get(name, [None]):
+            if cand is None:
+                break
+            if any(a in used for a in cand):
+                continue
+            if dim % _axis_size(mesh, cand) != 0:
+                continue
+            choice = tuple(cand) if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+        out.append(choice)
+    # trim trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def eval_shape_with_axes(init_fn, key):
+    """eval_shape an ``init(key) -> (params, axes)`` function: the axes
+    pytree (tuples of strings, not JAX types) is captured via closure."""
+    box = {}
+
+    def only_params(k):
+        p, a = init_fn(k)
+        box["axes"] = a
+        return p
+
+    params_shapes = jax.eval_shape(only_params, key)
+    return params_shapes, box["axes"]
+
+
+def params_shardings(mesh: Mesh, rules_cfg: ShardingRules, axes_tree,
+                     shapes_tree) -> Any:
+    """axes_tree: pytree of tuples (logical names); shapes_tree: matching
+    pytree of jax.ShapeDtypeStruct (from eval_shape) or arrays."""
+    rules = rules_cfg.table(mesh)
+
+    def per_leaf(ax, shp):
+        return NamedSharding(mesh, resolve_spec(mesh, rules, ax, shp.shape))
+
+    return jax.tree.map(per_leaf, axes_tree, shapes_tree,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def batch_shardings(mesh: Mesh, rules_cfg: ShardingRules, batch_tree) -> Any:
+    """Shard every batch leaf's dim-0 as 'batch' (with divisibility
+    fallback); optionally dim-1 as 'seq' when sp=True."""
+    rules = rules_cfg.table(mesh)
+
+    def per_leaf(x):
+        logical = ["batch"] + (["seq"] if rules_cfg.sp and x.ndim > 1 else
+                               [None] * max(0, x.ndim - 1))
+        logical += [None] * (x.ndim - len(logical))
+        return NamedSharding(mesh, resolve_spec(mesh, rules, logical, x.shape))
+
+    return jax.tree.map(per_leaf, batch_tree)
+
+
+def state_shardings(mesh: Mesh, rules_cfg: ShardingRules, model, opt,
+                    sample_key=None) -> tuple[Any, Any, Any]:
+    """Build (state_shapes, state_shardings, params_axes) for a
+    TrainState without allocating anything (eval_shape)."""
+    from repro.train.train_state import new_train_state
+
+    key = sample_key if sample_key is not None else jax.random.key(0)
+    params_shapes, axes = eval_shape_with_axes(model.init, key)
+
+    def init_state_shape():
+        # opt.init only inspects shapes/dtypes — safe under eval_shape
+        return None
+
+    state_shapes = jax.eval_shape(
+        lambda p: new_train_state(p, opt),
+        params_shapes)
+    p_shard = params_shardings(mesh, rules_cfg, axes, params_shapes)
+
+    # optimizer state: moments inherit the parameter sharding; scalars
+    # (step counts) replicate
+    def opt_leaf_sharding(path_shape):
+        return None
+
+    rep = NamedSharding(mesh, P())
+
+    # mu/nu (Adam) and factored vr/vc (Adafactor) mirror params where
+    # shapes match; anything else replicates.
+    flat_p, tdef_p = jax.tree.flatten(params_shapes)
+    flat_ps = jax.tree.leaves(p_shard)
+    shape2shard = {}
+    for s, sh in zip(flat_p, flat_ps):
+        shape2shard.setdefault((tuple(s.shape)), sh)
+
+    def moment_sharding(leaf):
+        return shape2shard.get(tuple(leaf.shape), rep)
+
+    opt_shard = jax.tree.map(moment_sharding, state_shapes.opt_state)
+    state_shard = type(state_shapes)(step=rep, params=p_shard,
+                                     opt_state=opt_shard)
+    return state_shapes, state_shard, axes

@@ -1,0 +1,18 @@
+"""TrainState pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    params: Any
+    opt_state: Any
+
+
+def new_train_state(params, opt) -> TrainState:
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=opt.init(params))

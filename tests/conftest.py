@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# CPU-only test environment: full-precision matmuls for tight tolerances.
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

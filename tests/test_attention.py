@@ -1,0 +1,102 @@
+"""Attention-path properties (hypothesis): the three implementations
+(dense, jnp-flash, Pallas flash) agree across shapes/windows, and the
+masking semantics hold."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (KVCache, _attend_dense, attend,
+                                    cache_update_decode,
+                                    cache_update_prefill, init_cache)
+
+
+def _qkv(b, t, h, kv, hd, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(ks[0], (b, t, h, hd)),
+            jax.random.normal(ks[1], (b, t, kv, hd)),
+            jax.random.normal(ks[2], (b, t, kv, hd)))
+
+
+@given(st.sampled_from([64, 128]), st.sampled_from([(4, 2), (4, 4), (8, 1)]),
+       st.sampled_from([None, 16, 48]))
+@settings(max_examples=10, deadline=None)
+def test_flash_equals_dense(t, heads, window):
+    h, kv = heads
+    q, k, v = _qkv(2, t, h, kv, 32, seed=t + h)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (2, t))
+    dense = attend(q, k, v, pos, pos, causal=True, window=window,
+                   flash_threshold=1 << 62)
+    flash = attend(q, k, v, pos, pos, causal=True, window=window,
+                   flash_threshold=1, chunk_q=32, chunk_k=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(flash),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_causality_property():
+    """Changing future tokens never changes past outputs."""
+    q, k, v = _qkv(1, 32, 4, 2, 16, seed=3)
+    pos = jnp.arange(32)[None]
+    base = attend(q, k, v, pos, pos, causal=True)
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-7.0)
+    pert = attend(q, k2, v2, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(base[:, :20]),
+                               np.asarray(pert[:, :20]), rtol=1e-5, atol=1e-6)
+    assert not np.allclose(np.asarray(base[:, 20:]), np.asarray(pert[:, 20:]))
+
+
+def test_window_property():
+    """With window w, tokens more than w in the past have no influence."""
+    w = 8
+    q, k, v = _qkv(1, 32, 2, 2, 16, seed=4)
+    pos = jnp.arange(32)[None]
+    base = attend(q, k, v, pos, pos, causal=True, window=w)
+    k2 = k.at[:, :16].set(5.0)       # outside the window of position >= 24
+    v2 = v.at[:, :16].set(5.0)
+    pert = attend(q, k2, v2, pos, pos, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(base[:, 24:]),
+                               np.asarray(pert[:, 24:]), rtol=1e-5, atol=1e-6)
+
+
+def test_empty_cache_slots_are_masked():
+    """Decode against a cache with unwritten (-1 position) slots ignores
+    them completely."""
+    cache = init_cache(batch=2, capacity=16, num_kv=2, head_dim=8,
+                       dtype=jnp.float32)
+    k = jax.random.normal(jax.random.key(0), (2, 4, 2, 8))
+    v = jax.random.normal(jax.random.key(1), (2, 4, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (2, 4))
+    cache = cache_update_prefill(cache, k, v, pos)
+    # poison unwritten slots: must not affect output
+    poisoned = cache._replace(k=cache.k.at[:, 4:].set(1e4),
+                              v=cache.v.at[:, 4:].set(1e4))
+    from repro.models.attention import decode_attend
+    q1 = jax.random.normal(jax.random.key(2), (2, 1, 4, 8))
+    np.testing.assert_allclose(
+        np.asarray(decode_attend(q1, cache)),
+        np.asarray(decode_attend(q1, poisoned)), rtol=1e-6)
+
+
+def test_ring_cache_invariant():
+    """Ring-buffer invariant (position p at slot p mod cap) holds through
+    a long prefill followed by decode writes."""
+    cap = 8
+    cache = init_cache(batch=1, capacity=cap, num_kv=1, head_dim=4,
+                       dtype=jnp.float32)
+    t = 19                                # > cap: trailing window kept
+    k = jnp.arange(t, dtype=jnp.float32).reshape(1, t, 1, 1) \
+        * jnp.ones((1, t, 1, 4))
+    pos = jnp.arange(t)[None]
+    cache = cache_update_prefill(cache, k, k, pos)
+    for step in range(3):
+        p = t + step
+        k1 = jnp.full((1, 1, 1, 4), float(p))
+        cache = cache_update_decode(cache, k1, k1, ring=True)
+        np_pos = np.asarray(cache.positions[0])
+        for slot in range(cap):
+            if np_pos[slot] >= 0:
+                assert np_pos[slot] % cap == slot
+                assert float(cache.k[0, slot, 0, 0]) == float(np_pos[slot])

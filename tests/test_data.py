@@ -1,0 +1,65 @@
+"""Data pipelines: determinism, restart-safety, host sharding."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (ExtremeDataConfig, ExtremeDataset, LMDataConfig,
+                        SyntheticLMStream)
+
+
+def test_lm_stream_deterministic_and_restart_safe():
+    cfg = LMDataConfig(vocab_size=100, seq_len=8, global_batch=4, seed=3)
+    s1 = SyntheticLMStream(cfg)
+    s2 = SyntheticLMStream(cfg)
+    for step in (0, 5, 1000):
+        np.testing.assert_array_equal(np.asarray(s1.batch_at(step)["tokens"]),
+                                      np.asarray(s2.batch_at(step)["tokens"]))
+    # different steps differ
+    assert not np.array_equal(np.asarray(s1.batch_at(0)["tokens"]),
+                              np.asarray(s1.batch_at(1)["tokens"]))
+
+
+def test_lm_stream_host_sharding_disjoint():
+    cfg = LMDataConfig(vocab_size=1000, seq_len=16, global_batch=8, seed=0)
+    h0 = SyntheticLMStream(cfg, host_index=0, host_count=2)
+    h1 = SyntheticLMStream(cfg, host_index=1, host_count=2)
+    b0 = np.asarray(h0.batch_at(7)["tokens"])
+    b1 = np.asarray(h1.batch_at(7)["tokens"])
+    assert b0.shape == (4, 17) and b1.shape == (4, 17)
+    assert not np.array_equal(b0, b1)
+
+
+def test_lm_stream_has_learnable_structure():
+    """Planted bigrams: successor correlation is present (otherwise the
+    example training loop would have nothing to learn)."""
+    cfg = LMDataConfig(vocab_size=64, seq_len=256, global_batch=4,
+                       bigram_p=0.5)
+    s = SyntheticLMStream(cfg)
+    toks = np.asarray(s.batch_at(0)["tokens"])
+    pred = (toks[:, :-1] * 31 + 7) % 64
+    rate = float(np.mean(pred == toks[:, 1:]))
+    # substitution applies to the *base* chain, so the observable rate is
+    # ~bigram_p² + noise ≈ 0.27 — still ~17x above the 1/64 chance level
+    assert rate > 0.2, rate
+
+
+def test_lm_stream_modalities():
+    cfg = LMDataConfig(vocab_size=10, seq_len=4, global_batch=2,
+                       enc_feats_dim=8, enc_len=5,
+                       prefix_feats_dim=6, prefix_len=3)
+    b = SyntheticLMStream(cfg).batch_at(0)
+    assert b["enc_feats"].shape == (2, 5, 8)
+    assert b["prefix_feats"].shape == (2, 3, 6)
+
+
+def test_extreme_dataset_splits_and_bayes():
+    ds = ExtremeDataset(ExtremeDataConfig(num_classes=64, dim=32, noise=0.2))
+    xtr, ytr = ds.batch_at(0, 128, "train")
+    xte, yte = ds.batch_at(0, 128, "test")
+    assert not np.array_equal(np.asarray(xtr), np.asarray(xte))
+    acc = ds.bayes_accuracy(steps=2, batch_size=256)
+    assert acc > 0.7
+    # zipf tail: frequent classes dominate
+    _, y = ds.batch_at(1, 4096)
+    counts = np.bincount(np.asarray(y), minlength=64)
+    assert counts[:8].sum() > counts[-32:].sum()

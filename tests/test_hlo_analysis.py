@@ -1,0 +1,121 @@
+"""Trip-count-aware HLO cost analyzer vs XLA's cost_analysis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_matches_xla_on_scan_free_program():
+    def f(x, w1, w2):
+        return jnp.sum(jnp.tanh(x @ w1) @ w2)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for s in [(128, 256), (256, 512), (512, 64)]]
+    c = _compile(f, *specs)
+    mine = ha.analyze(c.as_text())
+    xla = c.cost_analysis()
+    assert abs(mine["flops"] / xla["flops"] - 1) < 0.05
+
+
+def test_scan_flops_scale_with_trip_count():
+    def f(x, ws):
+        def body(c2, w):
+            return jnp.tanh(c2 @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    flops = {}
+    for n in (4, 16):
+        specs = [jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                 jax.ShapeDtypeStruct((n, 256, 256), jnp.float32)]
+        c = _compile(f, *specs)
+        mine = ha.analyze(c.as_text())
+        xla = c.cost_analysis()
+        expected = n * 2 * 128 * 256 * 256
+        assert abs(mine["flops"] / expected - 1) < 0.05, (n, mine["flops"])
+        # and XLA's raw number does NOT scale (the bug we correct)
+        flops[n] = (mine["flops"], xla["flops"])
+    assert flops[16][1] == flops[4][1]
+    assert flops[16][0] > 3.5 * flops[4][0]
+
+
+def test_nested_scans_multiply():
+    def f(x, ws):
+        def outer(c2, w):
+            def inner(c3, _):
+                return jnp.tanh(c3 @ w), None
+            c2, _ = jax.lax.scan(inner, c2, jnp.arange(3))
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return jnp.sum(y)
+
+    specs = [jax.ShapeDtypeStruct((64, 128), jnp.float32),
+             jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)]
+    mine = ha.analyze(_compile(f, *specs).as_text())
+    expected = 5 * 3 * 2 * 64 * 128 * 128
+    assert abs(mine["flops"] / expected - 1) < 0.1
+
+
+def test_dus_accumulation_not_overcharged():
+    """Scan ys accumulation must be charged per-slice, not per-buffer:
+    bytes must scale ~linearly in trip count, not quadratically."""
+    def f(x, ws):
+        def body(c2, w):
+            h = jnp.tanh(c2 @ w)
+            return h, h
+        _, ys = jax.lax.scan(body, x, ws)
+        return ys
+
+    per = {}
+    for n in (8, 32):
+        specs = [jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((n, 128, 128), jnp.float32)]
+        mine = ha.analyze(_compile(f, *specs).as_text())
+        per[n] = mine["bytes"] / n
+    assert per[32] < per[8] * 1.8, per  # superlinear growth = overcharge
+
+
+def test_collectives_counted_with_trip_multipliers():
+    """A psum inside a scan must be charged trip-count times."""
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # shard_map-free proxy: verify the parser on a synthetic module
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %ar = f32[128,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%i2, %ar)
+}
+
+%cond (p2: (s32[], f32[128,128])) -> pred[] {
+  %p2 = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %c = f32[128,128]{1,0} constant(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[128,128]{1,0}) tuple(%z, %c)
+  %w = (s32[], f32[128,128]{1,0}) while(%init), condition=%cond, body=%body
+  %r = f32[128,128]{1,0} get-tuple-element(%w), index=1
+  ROOT %out = f32[] constant(0)
+}
+"""
+    res = ha.analyze(hlo)
+    assert res["collectives"]["all-reduce"]["count"] == 12
+    assert res["collective_wire_bytes"] == 12 * 128 * 128 * 4

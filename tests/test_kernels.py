@@ -1,0 +1,224 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per instructions: shape/dtype sweeps + hypothesis, assert_allclose
+against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MACHConfig
+from repro.kernels import ops, ref
+from repro.kernels.lru_scan import lru_scan_pallas
+from repro.kernels.mach_decode import mach_decode_pallas
+from repro.kernels.mach_xent import mach_xent_pallas
+
+
+# ---------------------------------------------------------------------------
+# mach_decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,b,r,n", [
+    (1000, 32, 8, 16),      # paper-ish ODP block
+    (5003, 64, 4, 7),       # non-divisible K, odd N
+    (257, 16, 3, 1),        # single row
+    (21841 // 8, 512, 5, 4),  # imagenet-ish B
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mach_decode_table_mode(k, b, r, n, dtype):
+    cfg = MACHConfig(k, b, r)
+    tab = cfg.table()
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.key(k + n), (n, r, b)), -1).astype(dtype)
+    rv, ri = ref.mach_decode_ref(probs, tab)
+    kv, ki = mach_decode_pallas(probs, tab, num_classes=k, interpret=True)
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+
+
+@pytest.mark.parametrize("k,b,r", [(1000, 32, 8), (4096, 128, 3)])
+def test_mach_decode_inline_mode(k, b, r):
+    cfg = MACHConfig(k, b, r, hash_kind="mult_shift")
+    fam = cfg.family
+    probs = jax.nn.softmax(jax.random.normal(jax.random.key(0), (9, r, b)), -1)
+    rv, ri = ref.mach_decode_ref(probs, cfg.table())
+    kv, ki = mach_decode_pallas(
+        probs, num_classes=k, inline_coeffs=jnp.asarray(fam.coeffs()),
+        inline_shift=fam.shift, interpret=True)
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+
+
+@given(st.integers(50, 700), st.sampled_from([4, 16, 32]),
+       st.integers(1, 6), st.integers(1, 9))
+@settings(max_examples=12, deadline=None)
+def test_mach_decode_hypothesis(k, b, r, n):
+    cfg = MACHConfig(k, b, r)
+    tab = cfg.table()
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.key(k * n + r), (n, r, b)), -1)
+    rv, ri = ref.mach_decode_ref(probs, tab)
+    kv, ki = mach_decode_pallas(probs, tab, num_classes=k, interpret=True,
+                                block_k=128)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv), rtol=1e-5)
+
+
+def test_mach_decode_block_boundary_ties():
+    """Argmax ties across K-block boundaries resolve to the first index
+    (jnp.argmax semantics)."""
+    k, b, r, n = 300, 4, 2, 3
+    cfg = MACHConfig(k, b, r)
+    tab = cfg.table()
+    probs = jnp.ones((n, r, b)) / b       # all scores equal
+    _, ri = mach_decode_pallas(probs, tab, num_classes=k, interpret=True,
+                               block_k=128)
+    _, rr = ref.mach_decode_ref(probs, tab)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(rr))
+    assert int(ri[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# mach_xent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,r,b", [(16, 8, 32), (5, 3, 17), (64, 25, 32),
+                                   (2, 20, 512)])
+def test_mach_xent_fwd_bwd(n, r, b):
+    key = jax.random.key(n * r)
+    k1, k2 = jax.random.split(key)
+    logits = jax.random.normal(k1, (n, r, b))
+    labels = jax.random.randint(k2, (n, r), 0, b)
+    np.testing.assert_allclose(
+        np.asarray(ref.mach_xent_ref(logits, labels)),
+        np.asarray(mach_xent_pallas(logits, labels, None, True)),
+        rtol=1e-5, atol=1e-6)
+    g_ref = jax.grad(lambda lg: jnp.sum(ref.mach_xent_ref(lg, labels)))(logits)
+    g_k = jax.grad(lambda lg: jnp.sum(
+        mach_xent_pallas(lg, labels, None, True)))(logits)
+    np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_k),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mach_xent_matches_mach_loss():
+    """kernel == the core mach_loss (modulo batch reduction)."""
+    from repro.core.mach import mach_loss
+    n, r, b = 12, 6, 24
+    logits = jax.random.normal(jax.random.key(5), (n, r, b))
+    labels = jax.random.randint(jax.random.key(6), (n, r), 0, b)
+    per = ops.mach_xent(logits, labels, use_pallas=True, interpret=True)
+    core = mach_loss(logits, jnp.moveaxis(labels, -1, 0))
+    np.testing.assert_allclose(float(jnp.mean(per)), float(core), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lru_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bsz,t,d", [(2, 64, 128), (3, 128, 300),
+                                     (1, 256, 64), (5, 32, 513)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lru_scan(bsz, t, d, dtype):
+    key = jax.random.key(t + d)
+    ka, kx, kh = jax.random.split(key, 3)
+    a = jax.random.uniform(ka, (bsz, t, d), minval=0.5, maxval=0.99
+                           ).astype(dtype)
+    x = (jax.random.normal(kx, (bsz, t, d)) * 0.1).astype(dtype)
+    h0 = jax.random.normal(kh, (bsz, d)).astype(dtype)
+    r = ref.lru_scan_ref(a.astype(jnp.float32), x.astype(jnp.float32),
+                         h0.astype(jnp.float32))
+    k = lru_scan_pallas(a, x, h0, block_t=min(64, t), interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_lru_scan_state_continuity():
+    """Scanning two halves with carried state == one full scan."""
+    b, t, d = 2, 64, 128
+    key = jax.random.key(9)
+    a = jax.random.uniform(key, (b, t, d), minval=0.3, maxval=0.95)
+    x = jax.random.normal(jax.random.key(10), (b, t, d))
+    h0 = jnp.zeros((b, d))
+    full = ref.lru_scan_ref(a, x, h0)
+    h1 = ref.lru_scan_ref(a[:, :32], x[:, :32], h0)
+    h2 = ref.lru_scan_ref(a[:, 32:], x[:, 32:], h1[:, -1])
+    np.testing.assert_allclose(np.asarray(full[:, 32:]), np.asarray(h2),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_leading_dims():
+    cfg = MACHConfig(100, 16, 4)
+    tab = cfg.table()
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.key(0), (2, 3, 4, 16)), -1)
+    v1, i1 = ops.mach_top1(probs, tab, num_classes=100,
+                           use_pallas=True, interpret=True)
+    v2, i2 = ops.mach_top1(probs, tab, num_classes=100, use_pallas=False)
+    assert v1.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_mach_scores_matches_gather():
+    from repro.core.estimators import gather_class_probs
+    cfg = MACHConfig(77, 8, 5)
+    tab = cfg.table()
+    probs = jax.nn.softmax(jax.random.normal(jax.random.key(2), (6, 5, 8)), -1)
+    g = ops.mach_scores(probs, tab)                        # (6, 77)
+    meta = jnp.moveaxis(probs, 1, 0)                       # (R, N, B)
+    gathered = gather_class_probs(meta, tab).sum(0)        # (N, K)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gathered),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,kv,hd,window,bq,bk", [
+    (2, 128, 4, 2, 64, None, 64, 64),      # GQA
+    (1, 256, 8, 1, 32, None, 128, 64),     # MQA
+    (2, 128, 4, 4, 64, 48, 32, 32),        # MHA + sliding window
+    (1, 64, 2, 2, 128, None, 64, 64),      # single block
+])
+def test_flash_attention_vs_reference(b, t, h, kv, hd, window, bq, bk):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import attend
+    key = jax.random.key(t + h)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, t, h, hd))
+    k = jax.random.normal(kk, (b, t, kv, hd))
+    v = jax.random.normal(kv_, (b, t, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    want = attend(q, k, v, pos, pos, causal=True, window=window,
+                  flash_threshold=1 << 62)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=bq, block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import attend
+    b, t, h, kv, hd = 1, 128, 4, 2, 64
+    q = jax.random.normal(jax.random.key(0), (b, t, h, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (b, t, kv, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (b, t, kv, hd)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    want = attend(q, k, v, pos, pos, causal=True, flash_threshold=1 << 62)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                 block_k=64, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(want, np.float32),
+                               np.asarray(got, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,97 @@
+"""Partitioning rules: divisibility fallbacks, axis-conflict handling."""
+
+import types
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.partitioning import ShardingRules, resolve_spec
+
+
+class FakeMesh:
+    """resolve_spec only touches .shape and .axis_names."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+RULES = ShardingRules(fsdp=True, sp=False)
+
+
+def _spec(mesh, axes, shape, rules=RULES):
+    return resolve_spec(mesh, rules.table(mesh), axes, shape)
+
+
+def test_tp_sharding_divisible():
+    # mistral attention kernel (d, H, hd): d->data (fsdp), H->model
+    assert _spec(MESH1, ("embed", "heads", "qkv"), (12288, 96, 128)) == \
+        P("data", "model")
+
+
+def test_heads_fallback_when_not_divisible():
+    # paligemma: 8 heads % 16 -> replicated heads, fsdp on d_model
+    assert _spec(MESH1, ("embed", "heads", "qkv"), (2048, 8, 256)) == \
+        P("data")
+    # recurrentgemma: 10 heads
+    assert _spec(MESH1, ("embed", "heads", "qkv"), (2560, 10, 256)) == \
+        P("data")
+
+
+def test_mqa_kv_replicated():
+    assert _spec(MESH1, ("embed", "kv_heads", "qkv"), (6144, 1, 128)) == \
+        P("data")
+
+
+def test_vocab_and_mach_rb():
+    assert _spec(MESH1, ("vocab", "embed"), (256000, 2560)) == \
+        P("model", "data")
+    assert _spec(MESH1, ("embed", "mach_rb"), (2048, 16384)) == \
+        P("data", "model")
+
+
+def test_axis_conflict_first_wins():
+    # experts grabs 'model' when divisible; mlp then falls back
+    rules = RULES.table(MESH1)
+    spec = resolve_spec(MESH1, rules, ("experts", "embed", "mlp"),
+                        (16, 4096, 1408))
+    assert spec == P("model", "data")
+    # 60 experts don't divide 16 -> mlp gets model instead
+    spec2 = resolve_spec(MESH1, rules, ("experts", "embed", "mlp"),
+                         (60, 2048, 1408))
+    assert spec2 == P(None, "data", "model")
+
+
+def test_batch_uses_pod_axis_when_present():
+    assert _spec(MESH2, ("batch", None), (512, 100)) == P(("pod", "data"))
+    # batch=1 (long_500k) cannot shard -> replicated
+    assert _spec(MESH2, ("batch", None), (1, 100)) == P()
+
+
+def test_no_fsdp_disables_embed_sharding():
+    rules = ShardingRules(fsdp=False)
+    assert resolve_spec(MESH1, rules.table(MESH1),
+                        ("embed", "heads", "qkv"), (4096, 32, 128)) == \
+        P(None, "model")
+
+
+def test_sp_shards_seq():
+    rules = ShardingRules(fsdp=True, sp=True)
+    assert resolve_spec(MESH1, rules.table(MESH1),
+                        ("batch", "seq", None), (256, 4096, 8192)) == \
+        P("data", "model")
+    # seq=1 decode falls back
+    assert resolve_spec(MESH1, rules.table(MESH1),
+                        ("batch", "seq", None), (256, 1, 8192)) == P("data")
+
+
+def test_mach_pod_parallel_rule():
+    """MACH R-heads shard over (pod, model) — the paper's embarrassing
+    parallelism as a mesh axis (DESIGN.md §4)."""
+    rules = ShardingRules(fsdp=False, mach_pod_parallel=True)
+    spec = resolve_spec(MESH2, rules.table(MESH2),
+                        ("embed", "mach_rb"), (2048, 16384))
+    assert spec == P(None, ("pod", "model"))
