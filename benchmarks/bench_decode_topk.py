@@ -1,0 +1,152 @@
+"""Streaming top-k decode: fused path vs (B, V)-materializing reference.
+
+Sweeps (K, R, B, k) at serving-like batch sizes and records, per config:
+
+  * ``us_ref``   — the reference sampling path: estimator scores over the
+                   full (N, K) matrix (the gather) + ``jax.lax.top_k``;
+                   this is what ``sample_token`` used to run per token.
+  * ``us_fused`` — ``ops.mach_topk`` as dispatched on this backend.  On
+                   TPU that is the streaming Pallas kernel; on CPU the
+                   dispatcher falls back to the same reference math, so
+                   the two columns coincide — the JSON records
+                   ``fused_is_kernel`` so trend lines across backends
+                   aren't misread.
+  * ``hbm_bytes_*`` — the traffic model behind the paper's O(RBd + KR)
+                   claim: the reference moves the (N, K) f32 score
+                   matrix (plus the (R, N, K) gather intermediate);
+                   the kernel moves meta-probs + table + (N, k) out.
+  * ``verified`` — interpret-mode kernel == reference on this config
+                   (indices up to tie order, values to 1e-5).
+
+Writes ``BENCH_decode.json`` (see ``--out``) so the perf trajectory of
+the serving hot path is tracked from this PR forward.
+
+    PYTHONPATH=src python benchmarks/bench_decode_topk.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import MACHConfig
+from repro.kernels import ops, ref
+from repro.kernels.mach_topk import mach_topk_pallas
+
+# (K, R, B, k) sweep: ODP-/imagenet-/LM-vocab-like shapes
+SWEEP = [
+    (10_000, 8, 32, 16),
+    (50_000, 16, 64, 50),
+    (105_033, 25, 32, 64),     # paper's ODP config
+    (21_841, 20, 512, 10),     # paper's fine-grained imagenet config
+]
+QUICK_SWEEP = SWEEP[:2]
+BATCHES = (8, 32)
+VERIFY_N = 4                   # rows for the interpret-mode check
+
+
+def _traffic_model(n: int, k_cls: int, r: int, b: int, k: int) -> dict:
+    f32 = 4
+    ref_bytes = n * r * b * f32 + r * k_cls * f32 \
+        + r * n * k_cls * f32 + n * k_cls * f32      # gather intermediate + G
+    fused_bytes = n * r * b * f32 + r * k_cls * f32 + n * k * (f32 + 4)
+    return {"hbm_bytes_ref": ref_bytes, "hbm_bytes_fused": fused_bytes,
+            "traffic_ratio": ref_bytes / fused_bytes}
+
+
+def _verify(cfg: MACHConfig, k: int) -> bool:
+    """Interpret-mode kernel == reference, for all three estimators."""
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.key(1),
+                          (VERIFY_N, cfg.num_repetitions, cfg.num_buckets)),
+        -1)
+    tab = cfg.table()
+    for estimator in ("unbiased", "min", "median"):
+        rv, ri = ref.mach_topk_ref(probs, tab, k, estimator)
+        kv, ki = mach_topk_pallas(probs, tab, num_classes=cfg.num_classes,
+                                  k=k, estimator=estimator, interpret=True)
+        if not np.allclose(np.asarray(rv), np.asarray(kv),
+                           rtol=1e-5, atol=1e-6):
+            return False
+        if np.array_equal(np.asarray(ri), np.asarray(ki)):
+            continue
+        # tie-order tolerance: ref scores at the kernel's ids must match
+        scores = np.asarray(ref.mach_estimator_scores_ref(probs, tab,
+                                                          estimator))
+        if not np.allclose(
+                scores[np.arange(VERIFY_N)[:, None], np.asarray(ki)],
+                np.asarray(rv), rtol=1e-5, atol=1e-6):
+            return False
+    return True
+
+
+def bench(quick: bool = False, report=None) -> dict:
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    rows = []
+    for (k_cls, r, b, k) in (QUICK_SWEEP if quick else SWEEP):
+        cfg = MACHConfig(k_cls, b, r)
+        tab = cfg.table()
+        for n in BATCHES:
+            probs = jax.nn.softmax(
+                jax.random.normal(jax.random.key(n), (n, r, b)), -1)
+
+            ref_fn = jax.jit(lambda p, t: ref.mach_topk_ref(p, t, k))
+            us_ref = timeit(ref_fn, probs, tab, iters=5)
+
+            fused_fn = jax.jit(lambda p, t: ops.mach_topk(
+                p, t, num_classes=k_cls, k=k))
+            us_fused = timeit(fused_fn, probs, tab, iters=5)
+
+            row = {"K": k_cls, "R": r, "B": b, "k": k, "n": n,
+                   "us_ref": us_ref, "us_fused": us_fused,
+                   "fused_is_kernel": on_tpu,
+                   **_traffic_model(n, k_cls, r, b, k)}
+            rows.append(row)
+            if report:
+                report(f"decode_topk/K{k_cls}_R{r}_B{b}_k{k}_n{n}",
+                       us_fused,
+                       f"ref={us_ref:.0f}us traffic_ratio="
+                       f"{row['traffic_ratio']:.1f}x kernel={on_tpu}")
+    # interpret-mode correctness stamp on the smallest sweep entry
+    vk, vr, vb, vkk = (QUICK_SWEEP if quick else SWEEP)[0]
+    verified = _verify(MACHConfig(vk, vb, vr), vkk)
+    out = {"backend": backend, "fused_is_kernel": on_tpu,
+           "verified_interpret": bool(verified), "configs": rows}
+    if report:
+        report("decode_topk/verified", 0.0, f"interpret_match={verified}")
+    return out
+
+
+def run(report) -> None:
+    """benchmarks/run.py hook."""
+    result = bench(quick=True, report=report)
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (CI)")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args()
+    result = bench(quick=args.quick,
+                   report=lambda n, us, d="": print(f"{n},{us:.2f},{d}",
+                                                    flush=True))
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out} ({len(result['configs'])} configs, "
+          f"backend={result['backend']}, "
+          f"verified={result['verified_interpret']})")
+    return 0 if result["verified_interpret"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
   table2_resources  paper Table 2   (model size / time / accuracy)
   table3_estimators paper Table 3   (unbiased / min / median)
   bench_kernels     decode-cost claims (O(RBd+KR) vs O(Kd))
+  bench_decode_topk streaming top-k decode vs (B, V) reference
+                    (also writes BENCH_decode.json)
   roofline          §Roofline aggregation from the dry-run artifacts
 """
 
@@ -26,12 +28,13 @@ def main() -> int:
                     help="subset of benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (bench_kernels, fig1_tradeoff, roofline,
-                            table2_resources, table3_estimators)
+    from benchmarks import (bench_decode_topk, bench_kernels, fig1_tradeoff,
+                            roofline, table2_resources, table3_estimators)
     modules = {
         "table2_resources": table2_resources,
         "table3_estimators": table3_estimators,
         "bench_kernels": bench_kernels,
+        "bench_decode_topk": bench_decode_topk,
         "roofline": roofline,
         "fig1_tradeoff": fig1_tradeoff,
     }

@@ -57,6 +57,17 @@ def main():
     print(f"\n{len(prompts)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new/dt:.1f} tok/s on CPU, greedy, batch=4)")
 
+    # sampled decoding: per-request temperature/top-k, still on the
+    # fused streaming top-k path (no (batch, V) tensor anywhere)
+    sampler = ServingEngine(model, params,
+                            ServeConfig(max_len=128, batch_size=4,
+                                        max_new_tokens=16, top_k=16,
+                                        seed=0))
+    for i, p in enumerate(prompts[:4]):
+        sampler.add_request(p, {"temperature": 0.7 + 0.1 * i, "top_k": 8})
+    for p, o in zip(prompts, sampler.run()):
+        print(f"sampled {p} -> {o}")
+
 
 if __name__ == "__main__":
     main()

@@ -15,6 +15,7 @@ from repro.core.estimators import (
     median_estimator,
     min_estimator,
     predict_classes,
+    predict_topk,
     unbiased_estimator,
 )
 from repro.core.mach import (
@@ -31,7 +32,7 @@ __all__ = [
     "r_required", "indistinguishable_pair_bound", "memory_reduction",
     "ESTIMATORS", "estimate_class_probs", "gather_class_probs",
     "unbiased_estimator", "min_estimator", "median_estimator",
-    "predict_classes",
+    "predict_classes", "predict_topk",
     "MACHConfig", "MACHLinear", "MACHOutputHead", "mach_loss",
     "mach_meta_probs", "OAAClassifier",
 ]

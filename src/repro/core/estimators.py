@@ -17,6 +17,8 @@ the fused kernel computes.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 ESTIMATORS = ("unbiased", "min", "median")
@@ -74,3 +76,23 @@ def predict_classes(meta_probs: jnp.ndarray, table: jnp.ndarray,
                     estimator: str = "unbiased") -> jnp.ndarray:
     """argmax_i p̂_i — the paper's classification rule; shape (...,)."""
     return jnp.argmax(estimate_class_probs(meta_probs, table, estimator), axis=-1)
+
+
+def predict_topk(meta_probs: jnp.ndarray, table: jnp.ndarray, k: int,
+                 estimator: str = "unbiased", *,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k (p̂ values, class ids) under the chosen estimator.
+
+    meta_probs: (R, ..., B) — same layout as the other estimators here.
+    Routes to the fused streaming kernel when available (TPU, or forced
+    with ``use_pallas=True``), which never materializes the (..., K)
+    score matrix; otherwise the reference gather above.  Returns
+    ((..., k) f32, (..., k) int32).
+    """
+    from repro.kernels import ops  # deferred: kernels sit above core
+    return ops.mach_topk(jnp.moveaxis(meta_probs, 0, -2), table,
+                         num_classes=table.shape[-1], k=k,
+                         estimator=estimator, use_pallas=use_pallas,
+                         interpret=interpret)

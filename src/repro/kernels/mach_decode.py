@@ -38,6 +38,31 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
+def multihot_block(hash_ref, inline_shift, kbase, r, b, bk):
+    """(R, B, bk) one-hot bucket matrix built on the fly in VMEM.
+
+    M[r, b, k] = 1[h_r(kbase + k) = b], from either a tiled table slice
+    (hash_ref (r, bk) int32; ``inline_shift`` None) or inline
+    multiply-shift coefficients (hash_ref (r, 1) uint32).  Shared by the
+    top-1 and streaming top-k decode kernels.
+    """
+    if inline_shift is None:
+        buckets = hash_ref[...]                               # (r, bk)
+    else:
+        kk = (kbase + jax.lax.broadcasted_iota(jnp.int32, (r, bk), 1)
+              ).astype(jnp.uint32)
+        buckets = jax.lax.shift_right_logical(
+            hash_ref[...] * kk, jnp.uint32(inline_shift)).astype(jnp.int32)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (r, b, bk), 1)
+    return (iota_b == buckets[:, None, :]).astype(jnp.float32)
+
+
+def mask_k_tail(scores, kbase, num_classes, bn, bk):
+    """NEG_INF for the K padding tail (global class id >= K)."""
+    gidx = kbase + jax.lax.broadcasted_iota(jnp.int32, (bn, bk), 1)
+    return jnp.where(gidx < num_classes, scores, NEG_INF)
+
+
 def _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
                  val_out, idx_out):
     """Shared running-top-1 logic.  scores: (bn, bk) f32."""
@@ -59,54 +84,24 @@ def _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
         idx_out[...] = run_idx[...]
 
 
-def _decode_body_table(num_classes, bn, bk, r, b,
-                       probs_ref, table_ref, val_out, idx_out,
-                       run_val, run_idx):
-    """Table mode.  probs_ref: (bn, R*B) VMEM;  table_ref: (R, bk) int32."""
+def _decode_body(num_classes, bn, bk, r, b, shift,
+                 probs_ref, hash_ref, val_out, idx_out,
+                 run_val, run_idx):
+    """One (n-block, k-block) step.  probs_ref: (bn, R·B) VMEM;
+    hash_ref: (R, bk) int32 table tile (``shift`` None) or (R, 1) uint32
+    multiply-shift coefficients (bucket = (a_r · k mod 2^32) >> shift —
+    no hash table in HBM)."""
     kblk = pl.program_id(1)
     nk = pl.num_programs(1)
     kbase = kblk * bk
 
-    # Multi-hot M (R, B, bk): M[r, b, k] = 1[table[r, k] == b]; flattened
-    # r-major to (R·B, bk) so one MXU matmul covers all R repetitions.
-    iota_b = jax.lax.broadcasted_iota(jnp.int32, (r, b, bk), 1)
-    m = (iota_b == table_ref[...][:, None, :]).astype(jnp.float32)
+    # Multi-hot flattened r-major to (R·B, bk) so one MXU matmul covers
+    # all R repetitions.
+    m = multihot_block(hash_ref, shift, kbase, r, b, bk)
     scores = jnp.dot(probs_ref[...].astype(jnp.float32),
                      m.reshape(r * b, bk),
                      preferred_element_type=jnp.float32)              # (bn, bk)
-
-    # Mask the K padding tail (global class id >= K).
-    gidx = kbase + jax.lax.broadcasted_iota(jnp.int32, (bn, bk), 1)
-    scores = jnp.where(gidx < num_classes, scores, NEG_INF)
-    _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
-                 val_out, idx_out)
-
-
-def _decode_body_inline(num_classes, bn, bk, r, b, shift,
-                        probs_ref, coeff_ref, val_out, idx_out,
-                        run_val, run_idx):
-    """Inline multiply-shift mode — no hash table in HBM.
-
-    coeff_ref: (R, 1) uint32 VMEM; bucket = (a_r · k mod 2^32) >> shift.
-    """
-    kblk = pl.program_id(1)
-    nk = pl.num_programs(1)
-    kbase = kblk * bk
-
-    kk = (kbase + jax.lax.broadcasted_iota(jnp.int32, (r, bk), 1)
-          ).astype(jnp.uint32)
-    a = coeff_ref[...]                                                # (R, 1)
-    buckets = jax.lax.shift_right_logical(a * kk, jnp.uint32(shift)
-                                          ).astype(jnp.int32)         # (R, bk)
-
-    iota_b = jax.lax.broadcasted_iota(jnp.int32, (r, b, bk), 1)
-    m = (iota_b == buckets[:, None, :]).astype(jnp.float32)
-    scores = jnp.dot(probs_ref[...].astype(jnp.float32),
-                     m.reshape(r * b, bk),
-                     preferred_element_type=jnp.float32)
-
-    gidx = kbase + jax.lax.broadcasted_iota(jnp.int32, (bn, bk), 1)
-    scores = jnp.where(gidx < num_classes, scores, NEG_INF)
+    scores = mask_k_tail(scores, kbase, num_classes, bn, bk)
     _update_top1(scores, kbase, bn, run_val, run_idx, kblk, nk,
                  val_out, idx_out)
 
@@ -116,14 +111,49 @@ def choose_decode_blocks(n: int, rb: int,
                          block_k: Optional[int] = None,
                          vmem_budget: int = 6 * 2**20) -> tuple[int, int]:
     """Pick (bn, bk): P tile (bn·RB·4 B) + M tile (RB·bk·4 B) within budget,
-    bk a multiple of 128 (lane width) for MXU alignment."""
+    bk a multiple of 128 (lane width) for MXU alignment.
+
+    bn is rounded up to a multiple of 8 (the fp32 sublane tile) whatever
+    the caller passes — an odd ``block_n`` would otherwise produce a
+    padded N that bn does not tile cleanly on TPU.  The kernels pad N up
+    to the returned bn, so any bn/bk combination stays correct."""
     bn = block_n or min(128, max(8, n))
+    bn = max(8, -(-bn // 8) * 8)
     if block_k is None:
         bk = (vmem_budget // (4 * rb)) // 128 * 128
         bk = int(min(max(bk, 128), 2048))
     else:
         bk = block_k
     return bn, bk
+
+
+def prepare_decode_operands(meta_probs, table, num_classes, inline_coeffs,
+                            inline_shift, bn, bk, k_grid):
+    """Shared host-side setup for the top-1 and streaming top-k kernels.
+
+    Validates the hash source, pads N up to bn and the table's K up to
+    the grid (pad bucket = B: all-zero one-hot columns), and returns
+    (probs2d (npad, R·B), npad, hash_arg, hash_spec, inline_shift) —
+    ``inline_shift`` is None in table mode.
+    """
+    n, r, b = meta_probs.shape
+    probs2d = meta_probs.reshape(n, r * b)
+    n_pad = -n % bn
+    if n_pad:
+        probs2d = jnp.pad(probs2d, ((0, n_pad), (0, 0)))
+    if table is not None:
+        k_pad = k_grid * bk - num_classes
+        hash_arg = jnp.pad(table, ((0, 0), (0, k_pad)), constant_values=b)
+        hash_spec = pl.BlockSpec((r, bk), lambda i, j: (0, j))
+        inline_shift = None
+    else:
+        if inline_coeffs is None or inline_shift is None:
+            raise ValueError("need table or (inline_coeffs, inline_shift)")
+        if b & (b - 1):
+            raise ValueError("inline mode requires power-of-two B")
+        hash_arg = inline_coeffs.reshape(r, 1)
+        hash_spec = pl.BlockSpec((r, 1), lambda i, j: (0, 0))
+    return probs2d, n + n_pad, hash_arg, hash_spec, inline_shift
 
 
 def mach_decode_pallas(meta_probs: jnp.ndarray,
@@ -144,53 +174,22 @@ def mach_decode_pallas(meta_probs: jnp.ndarray,
     n, r, b = meta_probs.shape
     rb = r * b
     bn, bk = choose_decode_blocks(n, rb, block_n, block_k)
-    n_pad = -n % bn
     k_grid = pl.cdiv(num_classes, bk)
+    probs2d, npad, hash_arg, hash_spec, shift = prepare_decode_operands(
+        meta_probs, table, num_classes, inline_coeffs, inline_shift, bn, bk,
+        k_grid)
 
-    probs2d = meta_probs.reshape(n, rb)
-    if n_pad:
-        probs2d = jnp.pad(probs2d, ((0, n_pad), (0, 0)))
-    npad = n + n_pad
-
-    grid = (npad // bn, k_grid)
-    out_shape = (jax.ShapeDtypeStruct((npad, 1), jnp.float32),
-                 jax.ShapeDtypeStruct((npad, 1), jnp.int32))
-    scratch = [pltpu.VMEM((bn, 1), jnp.float32),
-               pltpu.VMEM((bn, 1), jnp.int32)]
-    out_specs = (pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
-                 pl.BlockSpec((bn, 1), lambda i, j: (i, 0)))
-    probs_spec = pl.BlockSpec((bn, rb), lambda i, j: (i, 0))
-
-    if table is not None:
-        k_pad = k_grid * bk - num_classes
-        tab = jnp.pad(table, ((0, 0), (0, k_pad)), constant_values=b)
-        body = functools.partial(_decode_body_table, num_classes, bn, bk, r, b)
-        val, idx = pl.pallas_call(
-            body,
-            grid=grid,
-            in_specs=[probs_spec,
-                      pl.BlockSpec((r, bk), lambda i, j: (0, j))],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=scratch,
-            interpret=interpret,
-        )(probs2d, tab)
-    else:
-        if inline_coeffs is None or inline_shift is None:
-            raise ValueError("need table or (inline_coeffs, inline_shift)")
-        if b & (b - 1):
-            raise ValueError("inline mode requires power-of-two B")
-        body = functools.partial(_decode_body_inline, num_classes, bn, bk,
-                                 r, b, inline_shift)
-        val, idx = pl.pallas_call(
-            body,
-            grid=grid,
-            in_specs=[probs_spec,
-                      pl.BlockSpec((r, 1), lambda i, j: (0, 0))],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=scratch,
-            interpret=interpret,
-        )(probs2d, inline_coeffs.reshape(r, 1))
+    val, idx = pl.pallas_call(
+        functools.partial(_decode_body, num_classes, bn, bk, r, b, shift),
+        grid=(npad // bn, k_grid),
+        in_specs=[pl.BlockSpec((bn, rb), lambda i, j: (i, 0)), hash_spec],
+        out_specs=(pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bn, 1), lambda i, j: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((npad, 1), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32),
+                        pltpu.VMEM((bn, 1), jnp.int32)],
+        interpret=interpret,
+    )(probs2d, hash_arg)
 
     return val[:n, 0], idx[:n, 0]

@@ -17,12 +17,23 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.mach_decode import mach_decode_pallas
+from repro.kernels.mach_topk import mach_topk_pallas
 from repro.kernels.mach_xent import mach_xent_pallas
 from repro.kernels.lru_scan import lru_scan_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _table_from_inline(inline_coeffs: jnp.ndarray, inline_shift: int,
+                       num_classes: int) -> jnp.ndarray:
+    """Rebuild the (R, K) bucket table from multiply-shift coefficients
+    (reference paths only — the kernels hash in-register)."""
+    k = jnp.arange(num_classes, dtype=jnp.uint32)
+    prod = inline_coeffs[:, None] * k[None, :]       # wraps mod 2^32
+    return jax.lax.shift_right_logical(
+        prod, jnp.uint32(inline_shift)).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -55,11 +66,8 @@ def mach_top1(meta_probs: jnp.ndarray,
             interpret=interp)
     else:
         if table is None:
-            # rebuild table from inline coefficients (reference path)
-            k = jnp.arange(num_classes, dtype=jnp.uint32)
-            prod = inline_coeffs[:, None] * k[None, :]
-            table = jax.lax.shift_right_logical(
-                prod, jnp.uint32(inline_shift)).astype(jnp.int32)
+            table = _table_from_inline(inline_coeffs, inline_shift,
+                                       num_classes)
         # gather-based scores (O(N·K·R) bytes) — the right CPU algorithm;
         # the one-hot-matmul form (ref.mach_decode_ref, the TPU kernel's
         # oracle) builds an O(K·R·B) one-hot regardless of N
@@ -70,6 +78,47 @@ def mach_top1(meta_probs: jnp.ndarray,
         idx = jnp.argmax(scores, axis=-1).astype(jnp.int32)
         val = jnp.max(scores, axis=-1)
     return val.reshape(lead), idx.reshape(lead)
+
+
+def mach_topk(meta_probs: jnp.ndarray,
+              table: Optional[jnp.ndarray] = None,
+              *,
+              num_classes: int,
+              k: int,
+              estimator: str = "unbiased",
+              inline_coeffs: Optional[jnp.ndarray] = None,
+              inline_shift: Optional[int] = None,
+              use_pallas: Optional[bool] = None,
+              interpret: Optional[bool] = None
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k classes under any paper estimator (unbiased | min | median).
+
+    meta_probs: (..., R, B) — leading dims flattened internally.
+    Returns (values (..., k) f32, indices (..., k) int32) on the
+    estimator's scale, matching ``estimate_class_probs`` + ``lax.top_k``
+    up to tie order.  The Pallas path streams a running top-k across K
+    blocks in VMEM and never materializes the (batch, K) score matrix;
+    the fallback is the reference gather (which does — CPU only).
+    """
+    if not 1 <= k <= num_classes:
+        raise ValueError(f"need 1 <= k <= num_classes, got k={k}, "
+                         f"num_classes={num_classes}")
+    lead = meta_probs.shape[:-2]
+    r, b = meta_probs.shape[-2:]
+    flat = meta_probs.reshape((-1, r, b))
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        val, idx = mach_topk_pallas(
+            flat, table, num_classes=num_classes, k=k, estimator=estimator,
+            inline_coeffs=inline_coeffs, inline_shift=inline_shift,
+            interpret=interp)
+    else:
+        if table is None:
+            table = _table_from_inline(inline_coeffs, inline_shift,
+                                       num_classes)
+        val, idx = ref.mach_topk_ref(flat, table, k, estimator)
+    return val.reshape(lead + (k,)), idx.reshape(lead + (k,))
 
 
 def mach_scores(meta_probs: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:

@@ -44,6 +44,31 @@ def mach_decode_ref(meta_probs: jnp.ndarray, table: jnp.ndarray
     return val.astype(jnp.float32), idx.astype(jnp.int32)
 
 
+def mach_estimator_scores_ref(meta_probs: jnp.ndarray, table: jnp.ndarray,
+                              estimator: str = "unbiased") -> jnp.ndarray:
+    """Estimator score matrix (N, K) — Eq. 2 / 7 / 8 via the explicit
+    (R, N, K) gather.  The paper-faithful reference for the streaming
+    top-k kernel, which never materializes any of these.
+
+    meta_probs: (N, R, B); table: (R, K).  Delegates to the semantic
+    definitions in ``core.estimators`` (single source of the paper's
+    formulas); only the layout transpose lives here.
+    """
+    from repro.core.estimators import estimate_class_probs
+    return estimate_class_probs(
+        jnp.moveaxis(meta_probs.astype(jnp.float32), 1, 0), table, estimator)
+
+
+def mach_topk_ref(meta_probs: jnp.ndarray, table: jnp.ndarray, k: int,
+                  estimator: str = "unbiased"
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k (values, class ids) of the estimator scores — the oracle for
+    ``mach_topk_pallas``.  Returns ((N, k) f32, (N, k) int32)."""
+    scores = mach_estimator_scores_ref(meta_probs, table, estimator)
+    val, idx = jax.lax.top_k(scores, k)
+    return val.astype(jnp.float32), idx.astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # MACH fused cross-entropy (training loss, Algorithm 1).
 # ---------------------------------------------------------------------------

@@ -230,9 +230,15 @@ class LanguageModel:
 
     def next_token(self, params, hidden: jnp.ndarray):
         """Greedy next token from final hidden states (B, d).
-        MACH path: fused decode kernel (never materializes (B, V))."""
+        MACH path: fused decode kernel (never materializes (B, V)) —
+        the top-1 summed-score kernel for the unbiased estimator, the
+        k=1 streaming top-k kernel for min/median, so greedy decode
+        always follows the configured prediction rule."""
         cfg = self.cfg
         if cfg.mach is not None:
+            if cfg.mach.estimator != "unbiased":
+                vals, idxs = self.topk_scores(params, hidden, 1)
+                return idxs[:, 0], vals[:, 0]
             logits = self.mach_logits(params, hidden)        # (B, R, Bk)
             probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
             fam = cfg.mach.family
@@ -250,23 +256,66 @@ class LanguageModel:
         val = jnp.max(logits, axis=-1)
         return idx, val
 
+    def topk_scores(self, params, hidden: jnp.ndarray, k: int,
+                    estimator: Optional[str] = None):
+        """Top-k (values, class ids) from final hidden states (B, d).
+
+        MACH path: the fused streaming top-k kernel — the (B, V) score
+        matrix is never materialized; values are on the configured
+        estimator's scale.  OAA path: plain ``lax.top_k`` over logits."""
+        cfg = self.cfg
+        if cfg.mach is None:
+            scores = self.oaa_logits(params, hidden).astype(jnp.float32)
+            return jax.lax.top_k(scores, k)
+        logits = self.mach_logits(params, hidden)                # (B, R, Bk)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        est = estimator or cfg.mach.estimator
+        fam = cfg.mach.family
+        if getattr(fam, "inline_kernel_ok", False):
+            return ops.mach_topk(
+                probs, num_classes=cfg.vocab_size, k=k, estimator=est,
+                inline_coeffs=jnp.asarray(fam.coeffs()),
+                inline_shift=fam.shift)
+        return ops.mach_topk(probs, cfg.mach.table(),
+                             num_classes=cfg.vocab_size, k=k, estimator=est)
+
     def sample_token(self, params, hidden: jnp.ndarray, key: jax.Array,
-                     *, temperature: float = 1.0, top_k: int = 50):
+                     *, temperature=1.0, top_k: int = 50,
+                     row_top_k: Optional[jnp.ndarray] = None,
+                     estimator: Optional[str] = None):
         """Top-k temperature sampling from final hidden states (B, d).
 
-        MACH path: class scores come from the paper's unbiased estimator
-        (Eq. 2 is affine in the summed scores, so sampling over the
-        softmax of summed scores / temperature is the MACH analogue of
-        sampling the full softmax)."""
+        MACH path: candidates come from the fused streaming top-k over
+        the configured estimator (Eq. 2/7/8) — no (B, V) tensor exists
+        anywhere on this path.  For the unbiased estimator the sampling
+        logits are rescaled back to the summed-score scale (Eq. 2's
+        affine map would otherwise multiply the effective temperature by
+        ~R), preserving the historical softmax(Σ_r scores / T)
+        semantics exactly; min/median sample on their own scale.
+
+        ``temperature`` may be a scalar or a per-row (B,) array;
+        ``row_top_k`` (optional (B,) int) restricts each row to its own
+        k_i <= top_k candidates (serving: per-request knobs inside one
+        fused batched call)."""
         cfg = self.cfg
+        vals, idxs = self.topk_scores(params, hidden, top_k,
+                                      estimator)                # (B, k)
         if cfg.mach is not None:
-            logits = self.mach_logits(params, hidden)
-            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-            scores = ops.mach_scores(probs, cfg.mach.table())   # (B, V)
-        else:
-            scores = self.oaa_logits(params, hidden).astype(jnp.float32)
-        vals, idxs = jax.lax.top_k(scores, top_k)               # (B, k)
-        gk = jax.random.categorical(key, vals / max(temperature, 1e-6))
+            est = estimator or cfg.mach.estimator
+            if est == "unbiased":
+                r, b = cfg.mach.num_repetitions, cfg.mach.num_buckets
+                # inverse of Eq. 2's affine map up to a per-row constant
+                # (which cancels in the categorical)
+                vals = vals * (r * (b - 1.0) / b)
+        temp = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+        if temp.ndim:
+            temp = temp[:, None]
+        logits_k = vals / temp
+        if row_top_k is not None:
+            rank = jnp.arange(top_k, dtype=jnp.int32)[None]     # (1, k)
+            logits_k = jnp.where(rank < row_top_k[:, None], logits_k,
+                                 -jnp.inf)
+        gk = jax.random.categorical(key, logits_k)
         picked = jnp.take_along_axis(idxs, gk[:, None], axis=-1)[:, 0]
         return picked.astype(jnp.int32)
 

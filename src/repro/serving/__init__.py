@@ -1,4 +1,7 @@
 from repro.serving.engine import (ServeConfig, ServingEngine, make_decode_fn,
-                                  make_prefill_fn)
+                                  make_prefill_fn, make_sample_decode_fn,
+                                  make_sample_prefill_fn)
 
-__all__ = ["ServeConfig", "ServingEngine", "make_prefill_fn", "make_decode_fn"]
+__all__ = ["ServeConfig", "ServingEngine", "make_prefill_fn",
+           "make_decode_fn", "make_sample_prefill_fn",
+           "make_sample_decode_fn"]

@@ -4,16 +4,19 @@ Two layers:
 
 * ``make_prefill_fn`` / ``make_decode_fn`` — the pure jit-compiled steps
   (these are what launch/dryrun.py lowers for the ``prefill_*`` /
-  ``decode_*`` / ``long_*`` cells).
+  ``decode_*`` / ``long_*`` cells), plus the ``make_sample_*`` variants
+  that thread a PRNG key and per-row sampling knobs through.
 * ``ServingEngine`` — a host-side batcher: accepts requests, packs them
   into fixed-size batches (padding short prompts), runs prefill once and
   decode steps until max tokens.  Greedy decoding uses the paper's
-  summed-score rule via the fused Pallas kernel; sampling falls back to
-  full estimated probabilities (reference path).
+  summed-score rule via the fused top-1 kernel; sampling uses the fused
+  *streaming top-k* kernel (temperature / top-k / estimator per request)
+  — both stay on the never-materialize path.
 
 The MACH win at serve time is exactly the paper's O(RBd + KR) vs O(Kd):
 the head matmul shrinks by V/(R·B) and the class-score aggregation never
-materializes the (batch, V) logits tensor.
+materializes the (batch, V) logits tensor — for greedy *and* sampled
+decoding.
 """
 
 from __future__ import annotations
@@ -35,6 +38,11 @@ class ServeConfig:
     max_new_tokens: int = 64
     eos_id: int = -1          # -1: never stop early
     pad_id: int = 0
+    # sampling defaults: temperature None -> greedy unless a request
+    # asks for sampling via extras {"temperature": t, "top_k": k}
+    temperature: Optional[float] = None
+    top_k: int = 50           # fused-kernel candidate count (static cap)
+    seed: int = 0
 
 
 def make_prefill_fn(model: LanguageModel):
@@ -55,6 +63,27 @@ def make_decode_fn(model: LanguageModel):
     return decode
 
 
+def make_sample_prefill_fn(model: LanguageModel, top_k: int):
+    """Sampling prefill: extra (key, temps (B,), row_k (B,)) operands.
+    Stays on the fused streaming top-k path — no (B, V) tensor."""
+    def prefill(params, batch, key, temps, row_k, *, max_len: int):
+        caches, enc_kvs, h_last = model.prefill(params, batch, max_len)
+        ids = model.sample_token(params, h_last, key, temperature=temps,
+                                 top_k=top_k, row_top_k=row_k)
+        return caches, enc_kvs, ids
+    return prefill
+
+
+def make_sample_decode_fn(model: LanguageModel, top_k: int):
+    """One sampled token step (per-row temperature / top-k)."""
+    def decode(params, caches, enc_kvs, tokens, pos, key, temps, row_k):
+        caches, h = model.decode_step(params, caches, enc_kvs, tokens, pos)
+        ids = model.sample_token(params, h, key, temperature=temps,
+                                 top_k=top_k, row_top_k=row_k)
+        return caches, ids
+    return decode
+
+
 class ServingEngine:
     """Host-side request batcher over the jitted prefill/decode steps."""
 
@@ -65,9 +94,22 @@ class ServingEngine:
         self._prefill = jax.jit(make_prefill_fn(model),
                                 static_argnames=("max_len",))
         self._decode = jax.jit(make_decode_fn(model))
+        self._sample_prefill = jax.jit(
+            make_sample_prefill_fn(model, scfg.top_k),
+            static_argnames=("max_len",))
+        self._sample_decode = jax.jit(make_sample_decode_fn(model, scfg.top_k))
         self._queue: list = []
+        # sampling PRNG stream: instance state so successive run() calls
+        # draw fresh keys (deterministic per engine, not per call)
+        self._base_key = jax.random.key(scfg.seed)
+        self._chunk_i = 0
 
     def add_request(self, prompt_tokens: list, extras: Optional[dict] = None):
+        """extras may carry frontend features ("enc_feats"/"prefix_feats")
+        and per-request sampling knobs ("temperature", "top_k").  A
+        per-request top_k is clamped to [1, ServeConfig.top_k] — the
+        engine config's value is the fused kernel's static candidate
+        cap; raise it there if requests need wider support."""
         self._queue.append((list(prompt_tokens), extras or {}))
 
     def _pack(self, requests):
@@ -83,6 +125,35 @@ class ServingEngine:
                 batch[k] = jnp.stack([jnp.asarray(r[1][k]) for r in requests])
         return batch, maxp
 
+    def _sampling_knobs(self, chunk):
+        """Per-row (temperature, top_k) arrays, or None for all-greedy.
+
+        A chunk samples iff the engine default or any request asks for
+        it; greedy rows inside a sampled chunk degrade to temperature
+        1e-6 over their top-1 candidate (== argmax)."""
+        scfg = self.scfg
+
+        def row_samples(extras):
+            return (scfg.temperature is not None
+                    or "temperature" in extras or "top_k" in extras)
+
+        if not any(row_samples(e) for _, e in chunk):
+            return None
+        temps, row_k = [], []
+        for _, extras in chunk:
+            if not row_samples(extras):         # greedy row in mixed batch
+                t, k = 1e-6, 1
+            else:
+                # any sampling knob opts the row in: a top_k-only request
+                # samples at temperature 1.0, it is not degraded to greedy
+                t = extras.get("temperature", scfg.temperature)
+                t = 1.0 if t is None else t
+                k = extras.get("top_k", scfg.top_k)
+            temps.append(max(float(t), 1e-6))
+            row_k.append(int(np.clip(k, 1, scfg.top_k)))
+        return (jnp.asarray(temps, jnp.float32),
+                jnp.asarray(row_k, jnp.int32))
+
     def run(self) -> list:
         """Serve all queued requests; returns list of generated id lists."""
         scfg = self.scfg
@@ -95,15 +166,29 @@ class ServingEngine:
             while len(chunk) < scfg.batch_size:
                 chunk.append((chunk[0][0], chunk[0][1]))
             batch, plen = self._pack(chunk)
-            caches, enc_kvs, ids = self._prefill(self.params, batch,
-                                                 max_len=scfg.max_len)
+            knobs = self._sampling_knobs(chunk)
+            ckey = jax.random.fold_in(self._base_key, self._chunk_i)
+            self._chunk_i += 1
+            if knobs is None:
+                caches, enc_kvs, ids = self._prefill(
+                    self.params, batch, max_len=scfg.max_len)
+            else:
+                temps, row_k = knobs
+                caches, enc_kvs, ids = self._sample_prefill(
+                    self.params, batch, jax.random.fold_in(ckey, 0),
+                    temps, row_k, max_len=scfg.max_len)
             b = ids.shape[0]
             gen = [ids]
             pos = jnp.full((b,), plen, jnp.int32)
             done = jnp.zeros((b,), bool)
-            for _ in range(scfg.max_new_tokens - 1):
-                caches, ids = self._decode(self.params, caches, enc_kvs,
-                                           gen[-1], pos)
+            for step in range(scfg.max_new_tokens - 1):
+                if knobs is None:
+                    caches, ids = self._decode(self.params, caches, enc_kvs,
+                                               gen[-1], pos)
+                else:
+                    caches, ids = self._sample_decode(
+                        self.params, caches, enc_kvs, gen[-1], pos,
+                        jax.random.fold_in(ckey, step + 1), temps, row_k)
                 gen.append(ids)
                 pos = pos + 1
                 if scfg.eos_id >= 0:

@@ -1,0 +1,38 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The tier-1 suite must run green without the optional property-testing
+dependency.  Importing ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` keeps every non-property test in a module
+collectable; when hypothesis is missing, each ``@given`` test is
+replaced by an explicitly *skipped* placeholder (visible in the report)
+rather than an ImportError that kills collection of the whole module.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies`` at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

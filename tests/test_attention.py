@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-dep shim
 
 from repro.models.attention import (KVCache, _attend_dense, attend,
                                     cache_update_decode,

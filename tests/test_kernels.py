@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-dep shim
 
 from repro.core import MACHConfig
 from repro.kernels import ops, ref
@@ -101,6 +101,34 @@ def test_mach_xent_fwd_bwd(n, r, b):
     g_k = jax.grad(lambda lg: jnp.sum(
         mach_xent_pallas(lg, labels, None, True)))(logits)
     np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_k),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,r,b", [(16, 4, 32),   # divisible N
+                                   (13, 6, 24)])  # padded N (bn=8 tiles)
+def test_mach_xent_vjp_matches_mach_loss_grad(n, r, b):
+    """The fused VJP must equal jax.grad of the core mach_loss (the
+    semantic definition), including through the N-padding path and the
+    weighted batch reduction."""
+    from repro.core.mach import mach_loss
+    key = jax.random.key(n + r)
+    k1, k2 = jax.random.split(key)
+    logits = jax.random.normal(k1, (n, r, b))
+    labels = jax.random.randint(k2, (n, r), 0, b)
+    weights = (jnp.arange(n) % 3 != 0).astype(jnp.float32)
+
+    def core(lg):
+        return mach_loss(lg, jnp.moveaxis(labels, -1, 0), weights)
+
+    def fused(lg):
+        per = mach_xent_pallas(lg, labels, 8, True)   # block_n=8: force pad
+        return jnp.sum(per * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+    np.testing.assert_allclose(float(core(logits)), float(fused(logits)),
+                               rtol=1e-6)
+    g_core = jax.grad(core)(logits)
+    g_fused = jax.grad(fused)(logits)
+    np.testing.assert_allclose(np.asarray(g_core), np.asarray(g_fused),
                                rtol=1e-5, atol=1e-6)
 
 

@@ -79,6 +79,114 @@ def test_lockstep_decode_positions(served):
     assert int(kv.index[0, 0]) == 4 + 3
 
 
+def test_greedy_decode_honors_estimator():
+    """With a min/median MACHConfig, next_token must follow the
+    configured prediction rule (k=1 streaming kernel), not the
+    summed-score rule — and greedy rows inside a mixed sampled batch
+    must produce the same tokens as a pure-greedy batch."""
+    cfg = ModelConfig(name="srv3", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=1, d_ff=64, vocab_size=120,
+                      dtype=jnp.float32,
+                      mach=MACHConfig(120, 16, 5, estimator="median"))
+    model = LanguageModel(cfg)
+    params, _ = model.init(jax.random.key(4))
+    h = jax.random.normal(jax.random.key(5), (4, 32))
+    ids, _ = model.next_token(params, h)
+    meta = mach_meta_probs(model.mach_logits(params, h).astype(jnp.float32))
+    want = predict_classes(meta, cfg.mach.table(), "median")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
+
+    pure = ServingEngine(model, params,
+                         ServeConfig(max_len=16, batch_size=2,
+                                     max_new_tokens=3))
+    pure.add_request([3, 7])
+    pure.add_request([9])
+    want_seq = pure.run()[0]
+    mixed = ServingEngine(model, params,
+                          ServeConfig(max_len=16, batch_size=2,
+                                      max_new_tokens=3, seed=2))
+    mixed.add_request([3, 7])                          # greedy row
+    mixed.add_request([9], {"temperature": 1.1, "top_k": 6})
+    assert mixed.run()[0] == want_seq
+
+
+def test_sampling_knobs_row_semantics(served):
+    """A top_k-only request samples (temp 1.0, its k); only rows with
+    no sampling knobs at all degrade to greedy in a mixed batch."""
+    cfg, model, params = served
+    eng = ServingEngine(model, params,
+                        ServeConfig(max_len=16, batch_size=3,
+                                    max_new_tokens=2, top_k=8))
+    chunk = [([1], {"top_k": 4}),            # sampling, default temp 1.0
+             ([2], {}),                      # greedy row
+             ([3], {"temperature": 0.3})]    # sampling, default k cap
+    temps, row_k = eng._sampling_knobs(chunk)
+    np.testing.assert_allclose(np.asarray(temps), [1.0, 1e-6, 0.3])
+    np.testing.assert_array_equal(np.asarray(row_k), [4, 1, 8])
+    # all-greedy chunk -> no sampling path at all
+    assert eng._sampling_knobs([([1], {}), ([2], {})]) is None
+
+
+def test_engine_sampling_mode(served):
+    """Engine-level sampling (fused streaming top-k path): per-request
+    temperature/top-k, deterministic under a fixed seed."""
+    cfg, model, params = served
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10]]
+
+    def run_once():
+        eng = ServingEngine(model, params,
+                            ServeConfig(max_len=32, batch_size=4,
+                                        max_new_tokens=5, temperature=0.9,
+                                        top_k=8, seed=42))
+        for i, p in enumerate(prompts):
+            eng.add_request(p, {"temperature": 0.5 + 0.2 * i,
+                                "top_k": 2 + i})
+        return eng.run()
+
+    outs1, outs2 = run_once(), run_once()
+    assert outs1 == outs2                      # same seed -> same samples
+    assert len(outs1) == len(prompts)
+    for seq in outs1:
+        assert len(seq) == 5
+        assert all(0 <= t < cfg.vocab_size for t in seq)
+
+
+def test_engine_fresh_keys_across_runs(served):
+    """Successive run() calls on one engine must draw fresh PRNG keys:
+    resubmitting the same sampled prompt should not replay the identical
+    'random' continuation every call."""
+    cfg, model, params = served
+    eng = ServingEngine(model, params,
+                        ServeConfig(max_len=32, batch_size=1,
+                                    max_new_tokens=6, temperature=1.5,
+                                    top_k=8, seed=0))
+    outs = []
+    for _ in range(3):
+        eng.add_request([1, 2, 3])
+        outs.append(tuple(eng.run()[0]))
+    assert len(set(outs)) > 1, outs
+
+
+def test_engine_mixed_greedy_and_sampled_chunk(served):
+    """A greedy request batched with sampled ones must still produce its
+    greedy continuation (temperature ~0 over the top-1 candidate)."""
+    cfg, model, params = served
+    greedy_eng = ServingEngine(model, params,
+                               ServeConfig(max_len=32, batch_size=2,
+                                           max_new_tokens=4))
+    greedy_eng.add_request([3, 1, 4])
+    greedy_eng.add_request([2, 7])
+    want = greedy_eng.run()[0]
+
+    mixed = ServingEngine(model, params,
+                          ServeConfig(max_len=32, batch_size=2,
+                                      max_new_tokens=4, seed=7))
+    mixed.add_request([3, 1, 4])                       # greedy row
+    mixed.add_request([2, 7], {"temperature": 1.2, "top_k": 6})
+    outs = mixed.run()
+    assert outs[0] == want
+
+
 def test_sample_token_topk(served):
     """Sampling stays within the top-k support and is temperature-
     sensitive; MACH and OAA paths both work."""
@@ -100,3 +208,25 @@ def test_sample_token_topk(served):
     s0 = model.sample_token(params, h, jax.random.key(0),
                             temperature=1e-6, top_k=5)
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(greedy))
+
+
+def test_sample_token_matches_legacy_summed_score_distribution(served):
+    """The fused path must reproduce the historical sampling semantics
+    exactly: categorical over softmax(summed scores / T) (Eq. 2's affine
+    scale is divided back out, so tuned temperatures keep meaning)."""
+    cfg, model, params = served
+    h = jax.random.normal(jax.random.key(13), (4, cfg.d_model))
+    logits = model.mach_logits(params, h)
+    meta = mach_meta_probs(logits.astype(jnp.float32))
+    from repro.kernels import ops
+    scores = ops.mach_scores(jnp.moveaxis(meta, 0, 1), cfg.mach.table())
+    for seed in range(5):
+        for temp in (0.5, 0.7, 1.3):
+            vals, idxs = jax.lax.top_k(scores, 5)           # legacy path
+            gk = jax.random.categorical(jax.random.key(seed), vals / temp)
+            legacy = jnp.take_along_axis(idxs, gk[:, None], axis=-1)[:, 0]
+            fused = model.sample_token(params, h, jax.random.key(seed),
+                                       temperature=temp, top_k=5)
+            np.testing.assert_array_equal(np.asarray(fused),
+                                          np.asarray(legacy),
+                                          err_msg=f"seed={seed} T={temp}")
