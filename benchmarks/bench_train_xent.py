@@ -1,0 +1,190 @@
+"""Training-loss hot path: fused projection+CE vs materialized logits.
+
+Sweeps (N, d, R, B) — N = B·T flattened tokens — and records, per config:
+
+  * ``us_materialized`` — value_and_grad of the materializing path
+                  (``head matmul → (N, R·B) logits → mach_xent``), i.e.
+                  what ``model.loss`` runs with ``mach_fused_loss=False``.
+  * ``us_fused``  — value_and_grad of ``ops.mach_fused_xent`` as
+                  dispatched on this backend.  On TPU that is the fused
+                  Pallas kernel; on CPU the dispatcher falls back to the
+                  same materializing reference math, so the two columns
+                  coincide — ``fused_is_kernel`` records which one ran.
+  * ``peak_act_bytes_*`` — the largest *activation* in the jaxpr of
+                  each path's forward+backward: intermediates carrying
+                  the batch dimension (leading dim in [N, N+block)).
+                  Parameter-shaped intermediates (the padded W, dW) are
+                  parameter/gradient memory — the paper's O(d log K)
+                  budget — and Pallas kernel internals are VMEM tiles;
+                  both are excluded.  The structural claim: the
+                  materialized path peaks at the N·R·B·4-byte logits
+                  tensor, the fused path's peak is h/dh-sized —
+                  independent of R·B.
+  * ``has_nrb_tensor_*`` — whether any batch-carrying intermediate of
+                  ≥ N·R·B elements exists in the pass.
+  * ``parity_max_abs_err`` / ``grad_allclose`` — interpret-mode kernel
+                  vs reference on this config (loss |Δ| and dh/dW at
+                  rtol 1e-4): the PR's acceptance gate, checked on every
+                  sweep entry (``--quick`` skips the largest).
+
+Writes ``BENCH_xent.json`` (see ``--out``) so the train-loss perf and
+memory trajectory is tracked from this PR forward.
+
+    PYTHONPATH=src python benchmarks/bench_train_xent.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import intermediate_avals, timeit
+from repro.kernels import ops, ref
+from repro.kernels.mach_fused_xent import mach_fused_xent_pallas
+
+# (N, d, R, B): acceptance config, paper's ODP (R=25, B=32) and
+# ImageNet-21k (R=20, B=512) heads, and a 32k-column ODP-scale head
+# that only the fused path can train without an (N, 32k) activation.
+# N != d everywhere so batch-carrying and param-shaped intermediates
+# are distinguishable by leading dim in the jaxpr scan.
+SWEEP = [
+    (256, 128, 16, 512),       # the PR's acceptance case (R·B = 8192)
+    (512, 256, 25, 32),        # ODP-like head
+    (320, 256, 20, 512),       # imagenet-21k-like head
+    (192, 128, 16, 2048),      # R·B = 32768: ODP-scale column count
+]
+QUICK_SWEEP = SWEEP[:2]
+
+
+def _memory_model(fn, args, n: int, nrb: int) -> dict:
+    """Activation accounting over the traced jaxpr: intermediates whose
+    leading dim is the (possibly block-padded) batch dim N.  Kernel
+    block sizes never exceed 128, so padding adds < 128 rows."""
+    avals = intermediate_avals(jax.make_jaxpr(fn)(*args).jaxpr)
+    acts = [a for a in avals
+            if getattr(a, "ndim", 0) >= 1 and a.size
+            and n <= a.shape[0] < n + 128]
+    return {"peak_act_bytes": max(a.size * a.dtype.itemsize for a in acts),
+            "has_nrb_tensor": any(a.size >= nrb for a in acts)}
+
+
+def _make_case(n, d, r, b, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed + n), 4)
+    h = jax.random.normal(k1, (n, d)) / np.sqrt(d)
+    w = jax.random.normal(k2, (d, r * b)) / np.sqrt(d)
+    y = jax.random.randint(k3, (n, r), 0, b)
+    g = jax.random.normal(k4, (n,))
+    return h, w, y, g
+
+
+def _verify(h, w, y, g, b) -> tuple[float, bool]:
+    """Interpret-mode kernel vs reference: (max |Δloss|, grads ok)."""
+    lr = ref.mach_fused_xent_ref(h, w, y, b)
+    lk = mach_fused_xent_pallas(h, w, y, b, None, None, True)
+    loss_err = float(jnp.max(jnp.abs(lr - lk)))
+    dr = jax.grad(lambda h_, w_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
+    dk = jax.grad(lambda h_, w_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, y, b, None, None, True) * g),
+        argnums=(0, 1))(h, w)
+    grads_ok = all(
+        np.allclose(np.asarray(a), np.asarray(k), rtol=1e-4, atol=1e-6)
+        for a, k in zip(dr, dk))
+    return loss_err, grads_ok
+
+
+def bench(quick: bool = False, report=None) -> dict:
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    rows = []
+    sweep = QUICK_SWEEP if quick else SWEEP
+    for (n, d, r, b) in sweep:
+        h, w, y, g = _make_case(n, d, r, b)
+        nrb = n * r * b
+
+        def mat_vag(h_, w_):
+            return jax.value_and_grad(lambda hh, ww: jnp.sum(
+                ref.mach_fused_xent_ref(hh, ww, y, b) * g),
+                argnums=(0, 1))(h_, w_)
+
+        def fused_vag(h_, w_):
+            # backend dispatch (kernel on TPU, reference elsewhere)
+            return jax.value_and_grad(lambda hh, ww: jnp.sum(
+                ops.mach_fused_xent(hh, ww, y, num_buckets=b) * g),
+                argnums=(0, 1))(h_, w_)
+
+        def kernel_vag(h_, w_):
+            # the kernel path regardless of backend (for the jaxpr scan)
+            return jax.value_and_grad(lambda hh, ww: jnp.sum(
+                mach_fused_xent_pallas(hh, ww, y, b, None, None, True) * g),
+                argnums=(0, 1))(h_, w_)
+
+        us_mat = timeit(jax.jit(mat_vag), h, w, iters=5)
+        us_fused = timeit(jax.jit(fused_vag), h, w, iters=5)
+        mem_mat = _memory_model(mat_vag, (h, w), n, nrb)
+        mem_fused = _memory_model(kernel_vag, (h, w), n, nrb)
+        loss_err, grads_ok = _verify(h, w, y, g, b)
+
+        row = {"N": n, "d": d, "R": r, "B": b, "RB": r * b,
+               "us_materialized": us_mat, "us_fused": us_fused,
+               "fused_is_kernel": on_tpu,
+               "peak_act_bytes_materialized": mem_mat["peak_act_bytes"],
+               "peak_act_bytes_fused": mem_fused["peak_act_bytes"],
+               "has_nrb_tensor_materialized": mem_mat["has_nrb_tensor"],
+               "has_nrb_tensor_fused": mem_fused["has_nrb_tensor"],
+               "act_ratio": mem_mat["peak_act_bytes"]
+               / mem_fused["peak_act_bytes"],
+               "parity_max_abs_err": loss_err,
+               "grad_allclose": bool(grads_ok)}
+        rows.append(row)
+        if report:
+            report(f"train_xent/N{n}_d{d}_R{r}_B{b}", us_fused,
+                   f"mat={us_mat:.0f}us act_ratio={row['act_ratio']:.1f}x "
+                   f"loss_err={loss_err:.1e} grads_ok={grads_ok} "
+                   f"kernel={on_tpu}")
+
+    verified = all(r["grad_allclose"] and r["parity_max_abs_err"] <= 1e-5
+                   for r in rows)
+    no_nrb = all(not r["has_nrb_tensor_fused"] for r in rows)
+    out = {"backend": backend, "fused_is_kernel": on_tpu,
+           "verified_interpret": bool(verified),
+           "fused_free_of_nrb_tensor": bool(no_nrb),
+           "configs": rows}
+    if report:
+        report("train_xent/verified", 0.0,
+               f"interpret_match={verified} no_nrb_tensor={no_nrb}")
+    return out
+
+
+def run(report) -> None:
+    """benchmarks/run.py hook."""
+    result = bench(quick=True, report=report)
+    with open("BENCH_xent.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sweep (CI)")
+    ap.add_argument("--out", default="BENCH_xent.json")
+    args = ap.parse_args()
+    result = bench(quick=args.quick,
+                   report=lambda n, us, d="": print(f"{n},{us:.2f},{d}",
+                                                    flush=True))
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out} ({len(result['configs'])} configs, "
+          f"backend={result['backend']}, "
+          f"verified={result['verified_interpret']}, "
+          f"no_nrb_tensor={result['fused_free_of_nrb_tensor']})")
+    return 0 if (result["verified_interpret"]
+                 and result["fused_free_of_nrb_tensor"]) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

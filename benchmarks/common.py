@@ -13,6 +13,20 @@ from repro.data import ExtremeDataConfig, ExtremeDataset
 from repro.optim import adamw, apply_updates
 
 
+def intermediate_avals(jaxpr, skip_primitives=("pallas_call",)):
+    """All avals produced by a jaxpr's equations, recursing into
+    sub-jaxprs (jit, custom_vjp, scan, ...) but not into Pallas kernels
+    — their tiles are VMEM-resident, not HBM.  Shared by the memory
+    accounting in bench_train_xent and the no-(N, R·B)-tensor test."""
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name not in skip_primitives:
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                out.extend(intermediate_avals(sub, skip_primitives))
+        out.extend(v.aval for v in eqn.outvars)
+    return out
+
+
 def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall time per call in microseconds (blocking on results)."""
     for _ in range(warmup):

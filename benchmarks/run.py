@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
   bench_kernels     decode-cost claims (O(RBd+KR) vs O(Kd))
   bench_decode_topk streaming top-k decode vs (B, V) reference
                     (also writes BENCH_decode.json)
+  bench_train_xent  fused projection+CE training loss vs materialized
+                    logits (also writes BENCH_xent.json)
   roofline          §Roofline aggregation from the dry-run artifacts
 """
 
@@ -28,13 +30,15 @@ def main() -> int:
                     help="subset of benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (bench_decode_topk, bench_kernels, fig1_tradeoff,
-                            roofline, table2_resources, table3_estimators)
+    from benchmarks import (bench_decode_topk, bench_kernels,
+                            bench_train_xent, fig1_tradeoff, roofline,
+                            table2_resources, table3_estimators)
     modules = {
         "table2_resources": table2_resources,
         "table3_estimators": table3_estimators,
         "bench_kernels": bench_kernels,
         "bench_decode_topk": bench_decode_topk,
+        "bench_train_xent": bench_train_xent,
         "roofline": roofline,
         "fig1_tradeoff": fig1_tradeoff,
     }

@@ -17,7 +17,10 @@ Guarantees:
   seamlessly (mesh-shape metadata is advisory, not binding).
 * **Async** — ``save(..., blocking=False)`` runs serialization on a
   background thread; ``wait()`` joins before the next save (so at most
-  one in flight).
+  one in flight).  A failure on the background thread is captured and
+  re-raised by the next ``wait()`` / ``save()`` / ``restore()`` — a
+  failed save is never silently reported durable.  Stale ``step_*.tmp``
+  directories left by crashed writers are swept on every GC.
 """
 
 from __future__ import annotations
@@ -46,6 +49,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state: Any, blocking: bool = True) -> None:
@@ -88,15 +92,32 @@ class CheckpointManager:
         if blocking:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            def _guarded():
+                try:
+                    _write()
+                except BaseException as e:  # noqa: BLE001 — re-raised on wait()
+                    self._exc = e
+
+            self._thread = threading.Thread(target=_guarded, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight async save; re-raise its failure if it had
+        one (so a failed save cannot be mistaken for a durable one)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _gc(self) -> None:
+        # sweep stale .tmp dirs first (crashed writers); the in-flight
+        # save's tmp has already been renamed by the time _gc runs
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)
         steps = self.all_steps()
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:012d}"),

@@ -229,6 +229,24 @@ class MACHOutputHead:
         return mach_loss(self.apply(params, h), self.cfg.hash_labels(labels),
                          weights)
 
+    def fused_loss(self, params: dict, h: jnp.ndarray, labels: jnp.ndarray,
+                   weights: Optional[jnp.ndarray] = None,
+                   use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+        """Logit-free counterpart of ``loss``: the projection is fused
+        into the hashed cross-entropy (``ops.mach_fused_xent``), so the
+        (…, R, B) logits tensor never exists — train-time activation
+        memory is O(N·d), not O(N·R·B).  Same value and gradients as
+        ``loss`` (the VJP accumulates dW and dh in-kernel)."""
+        from repro.kernels import ops  # deferred: kernels import core
+        hashed = jnp.moveaxis(self.cfg.hash_labels(labels), 0, -1)
+        nll = ops.mach_fused_xent(h, params["kernel"], hashed,
+                                  num_buckets=self.cfg.num_buckets,
+                                  use_pallas=use_pallas, interpret=interpret)
+        if weights is not None:
+            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+        return jnp.mean(nll)
+
     def param_count(self) -> int:
         return self.dim * self.out_features
 

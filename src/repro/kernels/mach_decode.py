@@ -38,6 +38,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of m >= x (shared by the MACH kernels' block
+    and padding arithmetic)."""
+    return -(-x // m) * m
+
+
 def multihot_block(hash_ref, inline_shift, kbase, r, b, bk):
     """(R, B, bk) one-hot bucket matrix built on the fly in VMEM.
 
@@ -118,7 +124,7 @@ def choose_decode_blocks(n: int, rb: int,
     padded N that bn does not tile cleanly on TPU.  The kernels pad N up
     to the returned bn, so any bn/bk combination stays correct."""
     bn = block_n or min(128, max(8, n))
-    bn = max(8, -(-bn // 8) * 8)
+    bn = max(8, round_up(bn, 8))
     if block_k is None:
         bk = (vmem_budget // (4 * rb)) // 128 * 128
         bk = int(min(max(bk, 128), 2048))

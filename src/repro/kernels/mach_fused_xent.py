@@ -1,0 +1,326 @@
+"""Fused projection + MACH cross-entropy (the logit-free training loss).
+
+``mach_xent.py`` fuses the R-head cross-entropy *given* the logits — but
+the trainer still materializes the full (N, R·B) logits tensor in HBM
+via the head matmul, so train-time activation memory is O(N·R·B) and
+the paper's O(d log K) story holds only for parameters.  This kernel
+fuses the hidden→bucket projection into the loss itself:
+
+    grid (N/bn, C/bc), C = R·B columns, C minor.  Per step the logits
+    tile ``h_blk (bn, d) @ W_blk (d, bc)`` is computed in VMEM and
+    immediately reduced: an online per-head max / sum-exp (flash-
+    attention-style, so heads may span several column blocks) and a
+    gather-free label pick (one-hot contraction against the in-VMEM
+    tile) accumulate into (bn, R) scratch.  The (N, R·B) logits tensor
+    never exists in HBM in either pass.
+
+Column blocks are head-aligned: when B fits the VMEM budget a block
+covers ``nh`` whole heads (no online rescaling ever fires — each head's
+logsumexp completes in its block); when B is larger than the budget a
+block is a bucket-slice of a single head and the online update streams
+the head's logsumexp across blocks.  Both cases run the same body.
+
+The custom VJP recomputes logits tiles (two extra matmuls, the standard
+fused-CE trade) from the saved per-head logsumexp:
+
+    dlogits[n, rB+b] = g_n · (softmax(logits)[n, r, b] − 1[b = y_nr])
+
+and accumulates ``dh = dlogits @ Wᵀ`` (N-blocks outer, scratch (bn, d))
+and ``dW = hᵀ @ dlogits`` (column-blocks outer, scratch (d, bc)) in two
+kernels whose grids match their reduction direction.  Activation
+residuals are h and the (N, R) logsumexp — O(N·d), independent of R·B.
+
+Padding: N pads to bn (padded rows get zero cotangent so contribute
+nothing), heads pad to a multiple of the per-block head count, buckets
+pad to a multiple of the block width; padded columns are masked to
+NEG_INF before the reduction and zeroed in the backward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mach_decode import NEG_INF, round_up
+
+_LANE = 128
+
+
+def choose_fused_blocks(n: int, d: int, r: int, b: int,
+                        block_n: Optional[int] = None,
+                        block_c: Optional[int] = None,
+                        vmem_budget: int = 6 * 2**20
+                        ) -> tuple[int, int, int, int]:
+    """Pick (bn, bc, rp, bp): N block, column block, padded head count,
+    padded bucket count.  Column blocks are head-aligned — either
+    ``bc = nh·b`` (nh whole heads per block, ``rp`` padded to a multiple
+    of nh) or ``bc | bp`` (bucket-slices of one head, ``bp`` the padded
+    per-head width).  Budget covers the W tile, the logits tile and the
+    backward accumulators, all f32."""
+    bn = block_n or min(128, max(8, n))
+    bn = max(8, round_up(bn, 8))
+    if block_c is not None:
+        bc_cap = max(1, block_c)
+    else:
+        bc_cap = vmem_budget // (4 * (2 * d + 2 * bn))
+        bc_cap = int(min(max(bc_cap // _LANE * _LANE, _LANE), 2048))
+    if b <= bc_cap:
+        nh = max(1, min(bc_cap // b, r))
+        bc, bp = nh * b, b
+        rp = round_up(r, nh)
+    else:
+        bc, rp = bc_cap, r
+        bp = round_up(b, bc)
+    return bn, bc, rp, bp
+
+
+def _pad_operands(h2, w, labels, r, b, bn, rp, bp):
+    """(h (N,d), w (d,R·B), y (N,R)) -> padded (h (Np,d), w (d,rp·bp),
+    y (Np,rp) int32).  W pads with zero heads/buckets (masked in-kernel),
+    labels pad with bucket 0 (their heads are masked)."""
+    n, d = h2.shape
+    npad = -n % bn
+    if npad:
+        h2 = jnp.pad(h2, ((0, npad), (0, 0)))
+        labels = jnp.pad(labels, ((0, npad), (0, 0)))
+    labels = jnp.pad(labels.astype(jnp.int32), ((0, 0), (0, rp - r)))
+    w3 = w.reshape(d, r, b)
+    w3 = jnp.pad(w3, ((0, 0), (0, rp - r), (0, bp - b)))
+    return h2, w3.reshape(d, rp * bp), labels
+
+
+def _tile_geometry(bc, bp, kblk):
+    """Static (nh, width) + traced (h0, boff) for the current column
+    block.  nh heads of ``width`` buckets each; h0 the first head id,
+    boff the bucket offset inside it (0 unless a head spans blocks)."""
+    nh = max(1, bc // bp)
+    width = bp if bc >= bp else bc
+    kbase = kblk * bc
+    h0 = kbase // bp
+    boff = kbase - h0 * bp
+    return nh, width, h0, boff
+
+
+def _masked_tile(h_ref, w_ref, bn, nh, width, boff, b):
+    """Logits tile (bn, nh, width) in f32, padded buckets at NEG_INF.
+    Returns (tile3, bidx) — bidx the per-position bucket id."""
+    tile = jnp.dot(h_ref[...].astype(jnp.float32),
+                   w_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    tile3 = tile.reshape(bn, nh, width)
+    bidx = boff + jax.lax.broadcasted_iota(jnp.int32, (bn, nh, width), 2)
+    return jnp.where(bidx < b, tile3, NEG_INF), bidx
+
+
+def _fwd_body(bn, bc, r, rp, b, bp,
+              h_ref, w_ref, y_ref, loss_ref, lse_ref,
+              m_scr, s_scr, p_scr):
+    """Forward step: online per-head (max, sumexp, picked) accumulation.
+    h_ref (bn, d); w_ref (d, bc); y_ref (bn, rp); scratch (bn, rp)."""
+    kblk = pl.program_id(1)
+    nkb = pl.num_programs(1)
+    nh, width, h0, boff = _tile_geometry(bc, bp, kblk)
+
+    @pl.when(kblk == 0)
+    def _init():
+        m_scr[...] = jnp.full((bn, rp), NEG_INF, jnp.float32)
+        s_scr[...] = jnp.zeros((bn, rp), jnp.float32)
+        p_scr[...] = jnp.zeros((bn, rp), jnp.float32)
+
+    tile3, bidx = _masked_tile(h_ref, w_ref, bn, nh, width, boff, b)
+    y_blk = y_ref[:, pl.ds(h0, nh)]                           # (bn, nh)
+    onehot = (bidx == y_blk[:, :, None]).astype(jnp.float32)
+    picked = jnp.sum(tile3 * onehot, axis=2)                  # (bn, nh)
+
+    # online logsumexp update on the nh heads this block touches
+    m_old = m_scr[:, pl.ds(h0, nh)]
+    s_old = s_scr[:, pl.ds(h0, nh)]
+    m_new = jnp.maximum(m_old, jnp.max(tile3, axis=2))
+    s_new = s_old * jnp.exp(m_old - m_new) \
+        + jnp.sum(jnp.exp(tile3 - m_new[:, :, None]), axis=2)
+    m_scr[:, pl.ds(h0, nh)] = m_new
+    s_scr[:, pl.ds(h0, nh)] = s_new
+    p_scr[:, pl.ds(h0, nh)] = p_scr[:, pl.ds(h0, nh)] + picked
+
+    @pl.when(kblk == nkb - 1)
+    def _flush():
+        lse = m_scr[...] + jnp.log(s_scr[...])                # (bn, rp)
+        head_ok = jax.lax.broadcasted_iota(jnp.int32, (bn, rp), 1) < r
+        loss_ref[...] = jnp.sum(
+            jnp.where(head_ok, lse - p_scr[...], 0.0),
+            axis=1, keepdims=True)
+        lse_ref[...] = jnp.where(head_ok, lse, 0.0)
+
+
+def _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
+                  bn, bc, r, b, bp, kblk):
+    """Recompute the logits tile and form g·(softmax − onehot),
+    zeroed at padded heads/buckets.  Returns (bn, bc) f32."""
+    nh, width, h0, boff = _tile_geometry(bc, bp, kblk)
+    tile3, bidx = _masked_tile(h_ref, w_ref, bn, nh, width, boff, b)
+    y_blk = y_ref[:, pl.ds(h0, nh)]
+    lse_blk = lse_ref[:, pl.ds(h0, nh)]                       # (bn, nh)
+    p = jnp.exp(tile3 - lse_blk[:, :, None])                  # softmax
+    onehot = (bidx == y_blk[:, :, None]).astype(jnp.float32)
+    head_ok = (h0 + jax.lax.broadcasted_iota(
+        jnp.int32, (bn, nh, width), 1)) < r
+    dtile3 = jnp.where((bidx < b) & head_ok,
+                       g_ref[...][:, :, None] * (p - onehot), 0.0)
+    return dtile3.reshape(bn, bc)
+
+
+def _bwd_dh_body(bn, bc, d, r, rp, b, bp,
+                 h_ref, w_ref, y_ref, lse_ref, g_ref, dh_ref, acc):
+    """dh = Σ_colblocks dlogits_tile @ W_blkᵀ;  grid (N/bn, C/bc)."""
+    kblk = pl.program_id(1)
+    nkb = pl.num_programs(1)
+
+    @pl.when(kblk == 0)
+    def _init():
+        acc[...] = jnp.zeros((bn, d), jnp.float32)
+
+    dtile = _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
+                          bn, bc, r, b, bp, kblk)
+    acc[...] += jax.lax.dot_general(
+        dtile, w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (bn, d)
+
+    @pl.when(kblk == nkb - 1)
+    def _flush():
+        dh_ref[...] = acc[...].astype(dh_ref.dtype)
+
+
+def _bwd_dw_body(bn, bc, d, r, rp, b, bp,
+                 h_ref, w_ref, y_ref, lse_ref, g_ref, dw_ref, acc):
+    """dW_blk = Σ_nblocks h_blkᵀ @ dlogits_tile;  grid (C/bc, N/bn) —
+    N minor so the (d, bc) accumulator sees all N blocks in order."""
+    kblk = pl.program_id(0)
+    iblk = pl.program_id(1)
+    nib = pl.num_programs(1)
+
+    @pl.when(iblk == 0)
+    def _init():
+        acc[...] = jnp.zeros((d, bc), jnp.float32)
+
+    dtile = _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
+                          bn, bc, r, b, bp, kblk)
+    acc[...] += jax.lax.dot_general(
+        h_ref[...].astype(jnp.float32), dtile,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (d, bc)
+
+    @pl.when(iblk == nib - 1)
+    def _flush():
+        dw_ref[...] = acc[...].astype(dw_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def mach_fused_xent_pallas(h2: jnp.ndarray, w: jnp.ndarray,
+                           hashed_labels: jnp.ndarray,
+                           num_buckets: int,
+                           block_n: Optional[int] = None,
+                           block_c: Optional[int] = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Per-example summed R-head CE, straight from hidden states.
+
+    h2 (N, d); w (d, R·B); hashed_labels (N, R) int32 -> (N,) f32.
+    Differentiable: the VJP yields (dh, dW) without ever forming the
+    (N, R·B) logits tensor."""
+    out, _ = _fused_fwd(h2, w, hashed_labels, num_buckets, block_n,
+                        block_c, interpret)
+    return out
+
+
+def _fused_call(kind, h2p, wp, yp, lsep, gp, dims, bn, bc, interpret):
+    """Shared pallas_call builder for the three passes."""
+    npad, d, r, rp, b, bp, c = dims
+    n_spec = pl.BlockSpec((bn, d), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((d, bc), lambda i, j: (0, j))
+    row_spec = lambda width: pl.BlockSpec((bn, width), lambda i, j: (i, 0))
+    if kind == "fwd":
+        return pl.pallas_call(
+            functools.partial(_fwd_body, bn, bc, r, rp, b, bp),
+            grid=(npad // bn, c // bc),
+            in_specs=[n_spec, w_spec, row_spec(rp)],
+            out_specs=(row_spec(1), row_spec(rp)),
+            out_shape=(jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+                       jax.ShapeDtypeStruct((npad, rp), jnp.float32)),
+            scratch_shapes=[pltpu.VMEM((bn, rp), jnp.float32)] * 3,
+            interpret=interpret,
+        )(h2p, wp, yp)
+    if kind == "dh":
+        return pl.pallas_call(
+            functools.partial(_bwd_dh_body, bn, bc, d, r, rp, b, bp),
+            grid=(npad // bn, c // bc),
+            in_specs=[n_spec, w_spec, row_spec(rp), row_spec(rp),
+                      row_spec(1)],
+            out_specs=n_spec,
+            out_shape=jax.ShapeDtypeStruct((npad, d), h2p.dtype),
+            scratch_shapes=[pltpu.VMEM((bn, d), jnp.float32)],
+            interpret=interpret,
+        )(h2p, wp, yp, lsep, gp)
+    # dW: column blocks outer, N minor
+    cw_spec = pl.BlockSpec((d, bc), lambda j, i: (0, j))
+    return pl.pallas_call(
+        functools.partial(_bwd_dw_body, bn, bc, d, r, rp, b, bp),
+        grid=(c // bc, npad // bn),
+        in_specs=[pl.BlockSpec((bn, d), lambda j, i: (i, 0)), cw_spec,
+                  pl.BlockSpec((bn, rp), lambda j, i: (i, 0)),
+                  pl.BlockSpec((bn, rp), lambda j, i: (i, 0)),
+                  pl.BlockSpec((bn, 1), lambda j, i: (i, 0))],
+        out_specs=cw_spec,
+        out_shape=jax.ShapeDtypeStruct((d, c), wp.dtype),
+        scratch_shapes=[pltpu.VMEM((d, bc), jnp.float32)],
+        interpret=interpret,
+    )(h2p, wp, yp, lsep, gp)
+
+
+def _check_shapes(h2, w, hashed_labels, num_buckets):
+    n, d = h2.shape
+    r = hashed_labels.shape[-1]
+    if hashed_labels.shape != (n, r):
+        raise ValueError(f"labels {hashed_labels.shape} vs h {h2.shape}")
+    if w.shape != (d, r * num_buckets):
+        raise ValueError(f"w {w.shape} != ({d}, {r}*{num_buckets})")
+    return n, d, r
+
+
+def _fused_fwd(h2, w, hashed_labels, num_buckets, block_n, block_c,
+               interpret):
+    n, d, r = _check_shapes(h2, w, hashed_labels, num_buckets)
+    b = num_buckets
+    bn, bc, rp, bp = choose_fused_blocks(n, d, r, b, block_n, block_c)
+    h2p, wp, yp = _pad_operands(h2, w, hashed_labels, r, b, bn, rp, bp)
+    dims = (h2p.shape[0], d, r, rp, b, bp, rp * bp)
+    loss, lse = _fused_call("fwd", h2p, wp, yp, None, None, dims, bn, bc,
+                            interpret)
+    return loss[:n, 0], (h2, w, hashed_labels, lse[:n])
+
+
+def _fused_bwd(num_buckets, block_n, block_c, interpret, res, g):
+    h2, w, hashed_labels, lse = res
+    n, d, r = _check_shapes(h2, w, hashed_labels, num_buckets)
+    b = num_buckets
+    bn, bc, rp, bp = choose_fused_blocks(n, d, r, b, block_n, block_c)
+    h2p, wp, yp = _pad_operands(h2, w, hashed_labels, r, b, bn, rp, bp)
+    npad = h2p.shape[0]
+    dims = (npad, d, r, rp, b, bp, rp * bp)
+    # padded rows/heads carry zero cotangent -> zero dlogits
+    gp = jnp.pad(g.astype(jnp.float32).reshape(n, 1),
+                 ((0, npad - n), (0, 0)))
+    lsep = jnp.pad(lse, ((0, npad - n), (0, 0)))
+    dh = _fused_call("dh", h2p, wp, yp, lsep, gp, dims, bn, bc,
+                     interpret)[:n]
+    dwp = _fused_call("dw", h2p, wp, yp, lsep, gp, dims, bn, bc,
+                      interpret)
+    dw = dwp.reshape(d, rp, bp)[:, :r, :b].reshape(d, r * b)
+    return dh, dw, None
+
+
+mach_fused_xent_pallas.defvjp(_fused_fwd, _fused_bwd)

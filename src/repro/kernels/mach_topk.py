@@ -50,13 +50,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.estimators import ESTIMATORS
 from repro.kernels.mach_decode import (NEG_INF, choose_decode_blocks,
                                        mask_k_tail, multihot_block,
-                                       prepare_decode_operands)
+                                       prepare_decode_operands, round_up)
 
 _LANE = 128          # TPU lane width: running-top-k capacity granularity
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _merge_topk(run_val, run_idx, blk_val, blk_idx, kcap):
@@ -152,7 +148,7 @@ def mach_topk_pallas(meta_probs: jnp.ndarray,
         raise ValueError(f"need 1 <= k <= num_classes, got k={k}, "
                          f"num_classes={num_classes}")
     rb = r * b
-    kcap = _round_up(k, _LANE)            # lane-aligned running capacity
+    kcap = round_up(k, _LANE)            # lane-aligned running capacity
     bn, bk = choose_decode_blocks(n, rb, block_n, block_k)
     if estimator != "unbiased" and block_k is None:
         # min/median also hold the (R, bn, bk) gathered tensor in VMEM
@@ -160,7 +156,7 @@ def mach_topk_pallas(meta_probs: jnp.ndarray,
         # (choose_decode_blocks budgets the unbiased path only).
         bk_est = (6 * 2**20 // (4 * (rb + r * bn))) // _LANE * _LANE
         bk = int(min(bk, max(bk_est, _LANE)))
-    bk = max(_round_up(bk, _LANE), kcap)  # block top_k needs bk >= kcap
+    bk = max(round_up(bk, _LANE), kcap)  # block top_k needs bk >= kcap
     k_grid = pl.cdiv(num_classes, bk)
     probs2d, npad, hash_arg, hash_spec, shift = prepare_decode_operands(
         meta_probs, table, num_classes, inline_coeffs, inline_shift, bn, bk,

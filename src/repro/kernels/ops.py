@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.mach_decode import mach_decode_pallas
+from repro.kernels.mach_fused_xent import mach_fused_xent_pallas
 from repro.kernels.mach_topk import mach_topk_pallas
 from repro.kernels.mach_xent import mach_xent_pallas
 from repro.kernels.lru_scan import lru_scan_pallas
@@ -150,6 +151,37 @@ def mach_xent(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
         out = mach_xent_pallas(lg, lbl, None, interp)
     else:
         out = ref.mach_xent_ref(lg, lbl)
+    return out.reshape(lead)
+
+
+def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
+                    hashed_labels: jnp.ndarray,
+                    *, num_buckets: int,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Logit-free fused projection + R-head CE (training fast path).
+
+    h: (..., d) hidden states; w: (d, R·B) head kernel;
+    hashed_labels: (..., R) bucket ids -> (...,) f32 per-example loss.
+
+    On the Pallas path the (…, R·B) logits tensor never exists in HBM
+    in either the forward or the backward pass (activation memory is
+    O(N·d + N·R)); the fallback is the materializing reference — the
+    right CPU algorithm, and the parity oracle.  Differentiable wrt h
+    and w (custom VJP with recomputing backward kernels).
+    """
+    lead = h.shape[:-1]
+    d = h.shape[-1]
+    r = hashed_labels.shape[-1]
+    h2 = h.reshape((-1, d))
+    lbl = hashed_labels.reshape((-1, r)).astype(jnp.int32)
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        out = mach_fused_xent_pallas(h2, w, lbl, num_buckets, None, None,
+                                     interp)
+    else:
+        out = ref.mach_fused_xent_ref(h2, w, lbl, num_buckets)
     return out.reshape(lead)
 
 

@@ -87,6 +87,22 @@ def mach_xent_ref(logits: jnp.ndarray, hashed_labels: jnp.ndarray) -> jnp.ndarra
     return jnp.sum(lse - picked, axis=-1)
 
 
+def mach_fused_xent_ref(h2: jnp.ndarray, w: jnp.ndarray,
+                        hashed_labels: jnp.ndarray,
+                        num_buckets: int) -> jnp.ndarray:
+    """Logit-materializing oracle for the fused projection+CE kernel.
+
+    h2: (N, d); w: (d, R·B); hashed_labels: (N, R) int32 -> (N,) f32.
+    Exactly the computation the fused kernel avoids: the full (N, R·B)
+    logits tensor is formed (in f32, matching the kernel's accumulation
+    dtype), then reduced by ``mach_xent_ref``.
+    """
+    n = h2.shape[0]
+    r = hashed_labels.shape[-1]
+    logits = jnp.dot(h2.astype(jnp.float32), w.astype(jnp.float32))
+    return mach_xent_ref(logits.reshape(n, r, num_buckets), hashed_labels)
+
+
 def mach_xent_grad_ref(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
                        g: jnp.ndarray) -> jnp.ndarray:
     """d loss / d logits = g * (softmax(logits) - onehot(labels)); (N, R, B)."""

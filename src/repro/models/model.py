@@ -27,6 +27,7 @@ from repro.models import attention as attn_lib
 from repro.models import frontends, layers, recurrent, xlstm
 from repro.models.transformer import (ModelConfig, apply_stacks, cross_kv,
                                       init_stacks, plan_stacks)
+from repro.sharding.partitioning import constrain
 
 
 class LanguageModel:
@@ -165,9 +166,20 @@ class LanguageModel:
             h = h[:, prefix.shape[1]:]                      # predict text only
 
         if cfg.mach is not None:
-            logits = self.mach_logits(params, h)            # (B, T, R, Bk)
             hashed = jnp.moveaxis(cfg.mach.hash_labels(labels), 0, -1)
-            per_tok = ops.mach_xent(logits, hashed)          # (B, T)
+            if cfg.mach_fused_loss:
+                # logit-free fast path: projection fused into the CE —
+                # the (B, T, R·Bk) logits tensor never exists in HBM.
+                # Constraints pin the kernel's operand (and so cotangent)
+                # shardings: dh on batch, dW on ("embed", "mach_rb").
+                hc = constrain(h, ("batch", None, None))
+                wk = constrain(params["mach_head"]["kernel"],
+                               ("embed", "mach_rb"))
+                per_tok = ops.mach_fused_xent(
+                    hc, wk, hashed, num_buckets=cfg.mach.num_buckets)
+            else:
+                logits = self.mach_logits(params, h)        # (B, T, R, Bk)
+                per_tok = ops.mach_xent(logits, hashed)      # (B, T)
         else:
             logits = self.oaa_logits(params, h).astype(jnp.float32)
             logz = jax.nn.logsumexp(logits, axis=-1)
@@ -296,7 +308,9 @@ class LanguageModel:
         ``temperature`` may be a scalar or a per-row (B,) array;
         ``row_top_k`` (optional (B,) int) restricts each row to its own
         k_i <= top_k candidates (serving: per-request knobs inside one
-        fused batched call)."""
+        fused batched call).  Values are clamped to [1, top_k]: a row
+        with k_i <= 0 would mask every candidate to -inf and make
+        ``jax.random.categorical`` return an undefined index."""
         cfg = self.cfg
         vals, idxs = self.topk_scores(params, hidden, top_k,
                                       estimator)                # (B, k)
@@ -312,8 +326,9 @@ class LanguageModel:
             temp = temp[:, None]
         logits_k = vals / temp
         if row_top_k is not None:
+            row_k = jnp.clip(jnp.asarray(row_top_k, jnp.int32), 1, top_k)
             rank = jnp.arange(top_k, dtype=jnp.int32)[None]     # (1, k)
-            logits_k = jnp.where(rank < row_top_k[:, None], logits_k,
+            logits_k = jnp.where(rank < row_k[:, None], logits_k,
                                  -jnp.inf)
         gk = jax.random.categorical(key, logits_k)
         picked = jnp.take_along_axis(idxs, gk[:, None], axis=-1)[:, 0]

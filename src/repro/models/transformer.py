@@ -77,6 +77,9 @@ class ModelConfig:
     num_prefix_tokens: int = 0       # vision patch count (prefix embeddings)
     # head
     mach: Optional[MACHConfig] = None
+    mach_fused_loss: bool = False    # train via the logit-free fused
+                                     # projection+CE kernel (activation
+                                     # memory O(N·d), not O(N·R·B))
     tie_embeddings: bool = False
     logit_softcap: float = 0.0
     embed_scale: float = 1.0         # gemma-family: sqrt(d_model)

@@ -88,6 +88,11 @@ class ServingEngine:
     """Host-side request batcher over the jitted prefill/decode steps."""
 
     def __init__(self, model: LanguageModel, params, scfg: ServeConfig):
+        if scfg.top_k < 1:
+            # the static candidate cap bounds every per-request top_k;
+            # 0 would clamp requests into an empty candidate set
+            raise ValueError(f"ServeConfig.top_k must be >= 1, "
+                             f"got {scfg.top_k}")
         self.model = model
         self.params = params
         self.scfg = scfg

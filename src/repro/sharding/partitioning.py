@@ -170,34 +170,41 @@ def state_shardings(mesh: Mesh, rules_cfg: ShardingRules, model, opt,
     key = sample_key if sample_key is not None else jax.random.key(0)
     params_shapes, axes = eval_shape_with_axes(model.init, key)
 
-    def init_state_shape():
-        # opt.init only inspects shapes/dtypes — safe under eval_shape
-        return None
-
     state_shapes = jax.eval_shape(
         lambda p: new_train_state(p, opt),
         params_shapes)
     p_shard = params_shardings(mesh, rules_cfg, axes, params_shapes)
-
-    # optimizer state: moments inherit the parameter sharding; scalars
-    # (step counts) replicate
-    def opt_leaf_sharding(path_shape):
-        return None
-
     rep = NamedSharding(mesh, P())
 
-    # mu/nu (Adam) and factored vr/vc (Adafactor) mirror params where
-    # shapes match; anything else replicates.
-    flat_p, tdef_p = jax.tree.flatten(params_shapes)
+    # Optimizer moments inherit the parameter sharding.  Every optimizer
+    # state here embeds (possibly several) copies of the params tree
+    # under some prefix (mu/nu, momentum, master weights), so a moment
+    # leaf is matched to its parameter by *tree path*: the longest
+    # parameter path that is a suffix of the moment's path, with the
+    # shape required to agree (Adafactor's factored vr/vc share the
+    # path but not the shape).  Keying by shape alone would silently
+    # give two same-shaped, differently-sharded params the first one's
+    # sharding.  Anything unmatched (step counts, factored moments)
+    # replicates.
+    p_paths = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
     flat_ps = jax.tree.leaves(p_shard)
-    shape2shard = {}
-    for s, sh in zip(flat_p, flat_ps):
-        shape2shard.setdefault((tuple(s.shape)), sh)
+    path2shard = [(jax.tree_util.keystr(path), tuple(leaf.shape), sh)
+                  for (path, leaf), sh in zip(p_paths, flat_ps)]
 
-    def moment_sharding(leaf):
-        return shape2shard.get(tuple(leaf.shape), rep)
+    opt_paths, opt_tdef = jax.tree_util.tree_flatten_with_path(
+        state_shapes.opt_state)
 
-    opt_shard = jax.tree.map(moment_sharding, state_shapes.opt_state)
+    def moment_sharding(path, leaf):
+        s = jax.tree_util.keystr(path)
+        best = None
+        for ppath, shape, sh in path2shard:
+            if s.endswith(ppath) and tuple(leaf.shape) == shape:
+                if best is None or len(ppath) > len(best[0]):
+                    best = (ppath, sh)
+        return best[1] if best is not None else rep
+
+    opt_shard = opt_tdef.unflatten(
+        [moment_sharding(path, leaf) for path, leaf in opt_paths])
     state_shard = type(state_shapes)(step=rep, params=p_shard,
                                      opt_state=opt_shard)
     return state_shapes, state_shard, axes

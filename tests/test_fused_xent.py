@@ -1,0 +1,212 @@
+"""Fused projection+CE kernel vs oracles: values, grads, memory shape.
+
+Parity ladder (all interpret=True on CPU):
+  kernel  ==  ref.mach_fused_xent_ref        (values + dh/dW grads)
+  ops.mach_fused_xent / head.fused_loss  ==  mach_loss(head.apply(...))
+  model.loss(mach_fused_loss=True)  ==  model.loss (materializing path)
+plus the structural claim the kernel exists for: no (N, R·B)-sized
+tensor appears in the jaxpr of either pass.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mach import MACHConfig, MACHOutputHead, mach_loss
+from repro.kernels import ops, ref
+from repro.kernels.mach_fused_xent import (choose_fused_blocks,
+                                           mach_fused_xent_pallas)
+from repro.models import LanguageModel, ModelConfig
+
+
+def _case(n, d, r, b, seed=0, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed + n + r), 4)
+    h = (jax.random.normal(k1, (n, d)) / np.sqrt(d)).astype(dtype)
+    w = (jax.random.normal(k2, (d, r * b)) / np.sqrt(d)).astype(dtype)
+    y = jax.random.randint(k3, (n, r), 0, b)
+    g = jax.random.normal(k4, (n,))
+    return h, w, y, g
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,r,b", [
+    (16, 32, 4, 8),        # several whole heads per column block
+    (13, 32, 6, 24),       # ragged N (padded to the 8-sublane tile)
+    (5, 32, 25, 32),       # paper ODP-ish R=25: padded head count
+    (2, 16, 20, 512),      # imagenet-ish B=512, tiny N
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_xent_matches_ref(n, d, r, b, dtype):
+    h, w, y, g = _case(n, d, r, b, dtype=dtype)
+    lr = ref.mach_fused_xent_ref(h, w, y, b)
+    lk = mach_fused_xent_pallas(h, w, y, b, None, None, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-5)
+    dr = jax.grad(lambda h_, w_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
+    dk = jax.grad(lambda h_, w_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, y, b, None, None, True) * g),
+        argnums=(0, 1))(h, w)
+    for a, k in zip(dr, dk):
+        assert a.dtype == k.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(k, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fused_xent_head_split_blocks():
+    """B larger than the column block: a head's logsumexp streams across
+    blocks through the online rescaling path."""
+    n, d, r, b = 9, 16, 3, 256
+    h, w, y, g = _case(n, d, r, b)
+    bn, bc, rp, bp = choose_fused_blocks(n, d, r, b, None, 64)
+    assert bc < b and bp % bc == 0          # the path under test
+    lr = ref.mach_fused_xent_ref(h, w, y, b)
+    lk = mach_fused_xent_pallas(h, w, y, b, None, 64, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-6)
+    dr = jax.grad(lambda h_, w_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
+    dk = jax.grad(lambda h_, w_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, y, b, None, 64, True) * g),
+        argnums=(0, 1))(h, w)
+    for a, k in zip(dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fused_xent_acceptance_case():
+    """The PR's acceptance config: (N=256, d=128, R=16, B=512) in
+    interpret mode — |Δloss| ≤ 1e-5, grads allclose at rtol 1e-4."""
+    n, d, r, b = 256, 128, 16, 512
+    h, w, y, g = _case(n, d, r, b, seed=7)
+    lr = ref.mach_fused_xent_ref(h, w, y, b)
+    lk = mach_fused_xent_pallas(h, w, y, b, None, None, True)
+    assert float(jnp.max(jnp.abs(lr - lk))) <= 1e-5
+    dr = jax.grad(lambda h_, w_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
+    dk = jax.grad(lambda h_, w_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, y, b, None, None, True) * g),
+        argnums=(0, 1))(h, w)
+    for a, k in zip(dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# integration: head / model parity with the materializing path
+# ---------------------------------------------------------------------------
+
+def test_head_fused_loss_matches_loss():
+    cfg = MACHConfig(1000, 16, 5)
+    head = MACHOutputHead(cfg, 24)
+    params = head.init(jax.random.key(0))
+    h = jax.random.normal(jax.random.key(1), (7, 3, 24))
+    labels = jax.random.randint(jax.random.key(2), (7, 3), 0, 1000)
+    weights = (jnp.arange(21).reshape(7, 3) % 4 != 0).astype(jnp.float32)
+
+    def mat(p):
+        return head.loss(p, h, labels, weights)
+
+    def fused(p):
+        return head.fused_loss(p, h, labels, weights,
+                               use_pallas=True, interpret=True)
+
+    l0, g0 = jax.value_and_grad(mat)(params)
+    l1, g1 = jax.value_and_grad(fused)(params)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(g0["kernel"]),
+                               np.asarray(g1["kernel"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_model_loss_fused_flag_parity():
+    cfg = ModelConfig(name="tiny", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=1, d_ff=64, vocab_size=64,
+                      dtype=jnp.float32, mach=MACHConfig(64, 8, 4))
+    cfgf = dataclasses.replace(cfg, mach_fused_loss=True)
+    m0, m1 = LanguageModel(cfg), LanguageModel(cfgf)
+    params, _ = m0.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 17), 0, 64)}
+    (l0, _), g0 = jax.value_and_grad(m0.loss, has_aux=True)(params, batch)
+    (l1, _), g1 = jax.value_and_grad(m1.loss, has_aux=True)(params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_model_loss_fused_flag_routes_to_kernel(monkeypatch):
+    """On CPU the flag's default dispatch falls back to the reference,
+    so the plain parity test never proves the *kernel* routing.  Fake a
+    TPU backend (with the kernel pinned to interpret mode) and check
+    model.loss under the flag actually reaches mach_fused_xent_pallas
+    and still matches the materialized path."""
+    from repro.kernels import ops as ops_mod
+
+    cfg = ModelConfig(name="tiny", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=1, d_ff=64, vocab_size=64,
+                      dtype=jnp.float32, mach=MACHConfig(64, 8, 4))
+    m0 = LanguageModel(cfg)
+    params, _ = m0.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 9), 0, 64)}
+    (l0, _), g0 = jax.value_and_grad(m0.loss, has_aux=True)(params, batch)
+
+    calls = {"n": 0}
+    orig = ops_mod.mach_fused_xent_pallas
+
+    def spy(h2, w, lbl, nb, bn, bc, interpret):
+        calls["n"] += 1
+        return orig(h2, w, lbl, nb, bn, bc, True)   # interpret on CPU
+
+    m1 = LanguageModel(dataclasses.replace(cfg, mach_fused_loss=True))
+    with monkeypatch.context() as mp:
+        mp.setattr(ops_mod, "_on_tpu", lambda: True)
+        mp.setattr(ops_mod, "mach_fused_xent_pallas", spy)
+        (l1, _), g1 = jax.value_and_grad(m1.loss, has_aux=True)(params,
+                                                                batch)
+    assert calls["n"] >= 1                          # kernel path taken
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the structural claim: no (N, R·B) tensor in either pass
+# ---------------------------------------------------------------------------
+
+def test_no_nrb_tensor_in_fused_jaxpr():
+    # shared jaxpr walker (tier-1 runs from the repo root, so the
+    # benchmarks package is importable alongside src/)
+    from benchmarks.common import intermediate_avals
+
+    n, d, r, b = 64, 32, 8, 128
+    h, w, y, g = _case(n, d, r, b)
+
+    def fused_vag(h_, w_):
+        return jax.value_and_grad(lambda hh, ww: jnp.sum(
+            mach_fused_xent_pallas(hh, ww, y, b, None, None, True) * g),
+            argnums=(0, 1))(h_, w_)
+
+    def mat_vag(h_, w_):
+        return jax.value_and_grad(lambda hh, ww: jnp.sum(
+            ref.mach_fused_xent_ref(hh, ww, y, b) * g),
+            argnums=(0, 1))(h_, w_)
+
+    nrb = n * r * b
+    fused_sizes = [a.size for a in intermediate_avals(
+        jax.make_jaxpr(fused_vag)(h, w).jaxpr) if hasattr(a, "size")]
+    mat_sizes = [a.size for a in intermediate_avals(
+        jax.make_jaxpr(mat_vag)(h, w).jaxpr) if hasattr(a, "size")]
+    # the materializing path forms (N, R·B) twice (fwd + bwd)...
+    assert any(s >= nrb for s in mat_sizes)
+    # ...the fused path never does, in either pass
+    assert all(s < nrb for s in fused_sizes), \
+        sorted(fused_sizes, reverse=True)[:5]

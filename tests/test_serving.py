@@ -210,6 +210,32 @@ def test_sample_token_topk(served):
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(greedy))
 
 
+def test_sample_token_row_top_k_zero_clamped(served):
+    """row_top_k=0 used to mask every candidate to -inf, making
+    jax.random.categorical return an undefined index; it now clamps to
+    1, i.e. the row degrades to its top-1 candidate (greedy)."""
+    cfg, model, params = served
+    h = jax.random.normal(jax.random.key(21), (3, cfg.d_model))
+    greedy, _ = model.next_token(params, h)
+    for seed in range(4):
+        s = model.sample_token(params, h, jax.random.key(seed),
+                               temperature=1.0, top_k=5,
+                               row_top_k=jnp.zeros((3,), jnp.int32))
+        assert bool(jnp.all((s >= 0) & (s < cfg.vocab_size)))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(greedy))
+    # mixed row_top_k: the 0 row is clamped, others unaffected
+    s = model.sample_token(params, h, jax.random.key(0), temperature=1e-6,
+                           top_k=5, row_top_k=jnp.asarray([0, 3, 1]))
+    np.testing.assert_array_equal(np.asarray(s[0]), np.asarray(greedy[0]))
+    np.testing.assert_array_equal(np.asarray(s[2]), np.asarray(greedy[2]))
+
+
+def test_engine_rejects_zero_top_k_cap(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, ServeConfig(top_k=0))
+
+
 def test_sample_token_matches_legacy_summed_score_distribution(served):
     """The fused path must reproduce the historical sampling semantics
     exactly: categorical over softmax(summed scores / T) (Eq. 2's affine

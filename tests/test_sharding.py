@@ -88,6 +88,45 @@ def test_sp_shards_seq():
                         ("batch", "seq", None), (256, 1, 8192)) == P("data")
 
 
+def test_state_shardings_keyed_by_path_not_shape():
+    """Two params with the same shape but different shardings: optimizer
+    moments must inherit their *own* param's sharding (the old
+    shape-keyed map silently gave both the first one's)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.optim import make_optimizer
+    from repro.sharding import partitioning as part
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+    class TwoParamModel:
+        def init(self, key):
+            p = {"emb": jnp.zeros((64, 128)), "head": jnp.zeros((64, 128))}
+            a = {"emb": ("embed", "mach_rb"), "head": ("vocab", "embed")}
+            return p, a
+
+    opt = make_optimizer("adamw", 1e-3)
+    _, shard, _ = part.state_shardings(mesh, ShardingRules(fsdp=True),
+                                       TwoParamModel(), opt)
+    p = shard.params
+    assert p["emb"].spec == P("data", "model")
+    assert p["head"].spec == P("model", "data")     # same shape, different
+    for tree in (shard.opt_state.mu, shard.opt_state.nu):
+        assert tree["emb"].spec == p["emb"].spec
+        assert tree["head"].spec == p["head"].spec
+    assert shard.opt_state.count.spec == P()        # scalar replicates
+
+    # adafactor's factored moments don't match any param shape -> replicate
+    _, shard_af, _ = part.state_shardings(
+        mesh, ShardingRules(fsdp=True), TwoParamModel(),
+        make_optimizer("adafactor", 1e-3))
+    assert shard_af.opt_state.vr["head"].spec == P()
+    assert shard_af.opt_state.vc["head"].spec == P()
+
+
 def test_mach_pod_parallel_rule():
     """MACH R-heads shard over (pod, model) — the paper's embarrassing
     parallelism as a mesh axis (DESIGN.md §4)."""

@@ -143,3 +143,56 @@ def test_async_checkpoint_save(stream):
         mgr.wait()
         assert mgr.all_steps() == [1, 2]
         assert mgr.latest_step() == 2
+
+
+def test_async_save_failure_raises_on_wait():
+    """A failed background save must surface on the next wait()/save(),
+    never be reported durable, and leave the manager usable."""
+    state = {"a": jnp.arange(4)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        # plant a regular *file* where the writer wants its .tmp dir:
+        # shutil.rmtree on it raises inside the background thread
+        blocker = os.path.join(d, "step_000000000007.tmp")
+        with open(blocker, "w") as f:
+            f.write("in the way")
+        mgr.save(7, state, blocking=False)
+        with pytest.raises(NotADirectoryError):
+            mgr.wait()
+        assert mgr.latest_step() is None     # failure not durable
+        # the captured failure is cleared once raised; manager recovers
+        os.remove(blocker)
+        mgr.save(7, state, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 7
+
+
+def test_async_save_failure_raises_on_next_save():
+    state = {"a": jnp.arange(4)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        blocker = os.path.join(d, "step_000000000003.tmp")
+        with open(blocker, "w") as f:
+            f.write("x")
+        mgr.save(3, state, blocking=False)
+        with pytest.raises(NotADirectoryError):
+            mgr.save(4, state)               # wait() runs first and raises
+        os.remove(blocker)
+        mgr.save(4, state)                   # recovered
+        assert mgr.latest_step() == 4
+
+
+def test_stale_tmp_dirs_swept_by_gc():
+    """step_*.tmp left by a crashed writer is GC'd by the next durable
+    save (and never shows up as a restorable step)."""
+    state = {"a": jnp.arange(4)}
+    with tempfile.TemporaryDirectory() as d:
+        stale = os.path.join(d, "step_000000000001.tmp")
+        os.makedirs(stale)
+        with open(os.path.join(stale, "junk"), "w") as f:
+            f.write("partial write")
+        mgr = CheckpointManager(d, keep=2)
+        assert mgr.all_steps() == []         # .tmp never restorable
+        mgr.save(2, state, blocking=True)
+        assert not os.path.exists(stale)
+        assert mgr.latest_step() == 2
