@@ -27,6 +27,31 @@ def intermediate_avals(jaxpr, skip_primitives=("pallas_call",)):
     return out
 
 
+def make_csr_case(n, d, r, b, nnz_max, seed=0, dtype=jnp.float32,
+                  ragged=True):
+    """Ragged-row CSR batch + MACH head operands — the shared fixture
+    behind the sparse-xent parity gate (bench_sparse_xent) and the
+    kernel tests, so both validate on the same input distribution.
+
+    Returns (indptr, indices, values, w, bias, y, g): row lengths in
+    [1, nnz_max] (or exactly nnz_max when ragged=False), feature ids in
+    [0, d), values/w in ``dtype``, bias (R·B,) f32, labels (n, R),
+    cotangent g (n,)."""
+    rng = np.random.default_rng(seed + n + d)
+    row_len = (rng.integers(1, nnz_max + 1, n) if ragged
+               else np.full(n, nnz_max))
+    indptr = jnp.asarray(np.concatenate([[0], np.cumsum(row_len)]),
+                         jnp.int32)
+    nnz = int(indptr[-1])
+    indices = jnp.asarray(rng.integers(0, d, nnz), jnp.int32)
+    values = jnp.asarray(rng.normal(size=nnz) / np.sqrt(nnz_max), dtype)
+    w = jnp.asarray(rng.normal(size=(d, r * b)) / np.sqrt(nnz_max), dtype)
+    bias = jnp.asarray(rng.normal(size=r * b) * 0.1, jnp.float32)
+    y = jnp.asarray(rng.integers(0, b, (n, r)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    return indptr, indices, values, w, bias, y, g
+
+
 def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall time per call in microseconds (blocking on results)."""
     for _ in range(warmup):

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
                     (also writes BENCH_decode.json)
   bench_train_xent  fused projection+CE training loss vs materialized
                     logits (also writes BENCH_xent.json)
+  bench_sparse_xent fused CSR projection+CE vs densified reference —
+                    the ODP sparse-feature path (also writes
+                    BENCH_sparse.json)
   roofline          §Roofline aggregation from the dry-run artifacts
 """
 
@@ -31,14 +34,16 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (bench_decode_topk, bench_kernels,
-                            bench_train_xent, fig1_tradeoff, roofline,
-                            table2_resources, table3_estimators)
+                            bench_sparse_xent, bench_train_xent,
+                            fig1_tradeoff, roofline, table2_resources,
+                            table3_estimators)
     modules = {
         "table2_resources": table2_resources,
         "table3_estimators": table3_estimators,
         "bench_kernels": bench_kernels,
         "bench_decode_topk": bench_decode_topk,
         "bench_train_xent": bench_train_xent,
+        "bench_sparse_xent": bench_sparse_xent,
         "roofline": roofline,
         "fig1_tradeoff": fig1_tradeoff,
     }

@@ -21,6 +21,12 @@ Guarantees:
   re-raised by the next ``wait()`` / ``save()`` / ``restore()`` — a
   failed save is never silently reported durable.  Stale ``step_*.tmp``
   directories left by crashed writers are swept on every GC.
+* **Retry** — each save attempt is wrapped in a bounded retry with
+  exponential backoff (``save_retries`` attempts, ``retry_backoff·2^k``
+  sleeps): at pod scale, transient FS errors (NFS hiccups, GCS-fuse
+  timeouts) shouldn't kill the run at the next ``wait()``.  Attempts
+  are whole-write idempotent (the ``.tmp`` dir is recreated each try);
+  only ``OSError`` retries, and the final failure re-raises.
 """
 
 from __future__ import annotations
@@ -29,6 +35,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -44,9 +51,12 @@ def _flatten(tree: Any):
 
 class CheckpointManager:
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 save_retries: int = 3, retry_backoff: float = 0.1):
         self.directory = directory
         self.keep = keep
+        self.save_retries = max(1, save_retries)
+        self.retry_backoff = retry_backoff
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._exc: Optional[BaseException] = None
@@ -60,6 +70,8 @@ class CheckpointManager:
         host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
 
         def _write():
+            # phase 1 (retryable as a whole): write the step dir; the
+            # rename at the end is the durability point
             name = f"step_{step:012d}"
             final = os.path.join(self.directory, name)
             if os.path.exists(final):        # idempotent re-save of a step
@@ -81,6 +93,13 @@ class CheckpointManager:
                 f.flush()
                 os.fsync(f.fileno())
             os.rename(tmp, final)
+
+        def _publish():
+            # phase 2 (retryable on its own): LATEST pointer + GC.  The
+            # step dir is already durable — a failure here must never
+            # re-enter _write, whose first act would rmtree it.
+            # (latest_step() falls back to a directory scan, so a stale
+            # LATEST is recoverable; the re-raise still surfaces it.)
             with open(os.path.join(self.directory, "LATEST.tmp"), "w") as f:
                 f.write(str(step))
                 f.flush()
@@ -89,12 +108,27 @@ class CheckpointManager:
                       os.path.join(self.directory, "LATEST"))
             self._gc()
 
+        def _retry(fn):
+            # each _write attempt recreates the .tmp dir from scratch,
+            # so a half-written attempt never leaks into the next one
+            for attempt in range(self.save_retries):
+                try:
+                    return fn()
+                except OSError:
+                    if attempt == self.save_retries - 1:
+                        raise
+                    time.sleep(self.retry_backoff * (2 ** attempt))
+
+        def _write_with_retry():
+            _retry(_write)
+            _retry(_publish)
+
         if blocking:
-            _write()
+            _write_with_retry()
         else:
             def _guarded():
                 try:
-                    _write()
+                    _write_with_retry()
                 except BaseException as e:  # noqa: BLE001 — re-raised on wait()
                     self._exc = e
 

@@ -22,6 +22,15 @@ class ExtremeTaskConfig:
     small_classes: int
     small_dim: int
     small_r: int
+    # sparse-feature (bag-of-words) tasks: nonzeros per example.  ODP's
+    # d=422k features are CSR-sparse — the regime the fused-CSR training
+    # path exists for; 0 means the task is dense (ImageNet embeddings).
+    nnz: int = 0
+    small_nnz: int = 0
+
+    @property
+    def sparse_features(self) -> bool:
+        return self.nnz > 0
 
     def mach(self, small: bool = False) -> MACHConfig:
         return MACHConfig(
@@ -31,12 +40,33 @@ class ExtremeTaskConfig:
             hash_kind="mult_shift" if (self.mach_b & (self.mach_b - 1)) == 0
             else "carter_wegman")
 
+    def sparse_data(self, small: bool = True, noise: float = 0.3,
+                    seed: int = 0) -> "SparseExtremeDataConfig":
+        """Config for the Zipf-sparse CSR generator (data/extreme.py)
+        matching this task's (K, d, nnz) at the chosen scale."""
+        from repro.data.extreme import SparseExtremeDataConfig
+        if not self.sparse_features:
+            raise ValueError(f"{self.name} is a dense-feature task")
+        nnz = self.small_nnz if small else self.nnz
+        return SparseExtremeDataConfig(
+            num_classes=self.small_classes if small else self.num_classes,
+            num_features=self.small_dim if small else self.dim,
+            nnz=nnz, sig_features=max(1, nnz // 2), noise=noise,
+            seed=seed)
 
-# Paper Table 2 run: ODP (B=32, R=25) — 125x model-size reduction
+
+# Paper Table 2 run: ODP (B=32, R=25) — 125x model-size reduction.
+# Features are bag-of-words CSR (the paper trains d=422k on one GPU
+# precisely because only ~100 features/doc are active).
+# nnz is kept OFF lane multiples (120, not 128): the fused-CSR op
+# appends one unit feature per row for the bias, and a lane-multiple
+# nnz_max would push the padded ELL width to the next 128 block —
+# doubling the kernel's densify-tile work for one column.
 ODP = ExtremeTaskConfig(
     name="odp", num_classes=105033, dim=422713,
     mach_b=32, mach_r=25,
     small_classes=1024, small_dim=256, small_r=12,
+    nnz=120, small_nnz=32,
 )
 
 # Paper Table 2 run: ImageNet-21k (B=512, R=20) — 2x reduction

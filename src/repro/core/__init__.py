@@ -20,8 +20,10 @@ from repro.core.estimators import (
 )
 from repro.core.mach import (
     MACHConfig,
+    MACHHead,
     MACHLinear,
     MACHOutputHead,
+    is_sparse_batch,
     mach_loss,
     mach_meta_probs,
 )
@@ -33,6 +35,6 @@ __all__ = [
     "ESTIMATORS", "estimate_class_probs", "gather_class_probs",
     "unbiased_estimator", "min_estimator", "median_estimator",
     "predict_classes", "predict_topk",
-    "MACHConfig", "MACHLinear", "MACHOutputHead", "mach_loss",
-    "mach_meta_probs", "OAAClassifier",
+    "MACHConfig", "MACHHead", "MACHLinear", "MACHOutputHead",
+    "is_sparse_batch", "mach_loss", "mach_meta_probs", "OAAClassifier",
 ]

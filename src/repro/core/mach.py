@@ -5,11 +5,18 @@ Three integration levels, lowest to highest:
 * ``mach_loss``        — loss-level: R-head cross-entropy on hashed labels
                          (Algorithm 1's trainLogistic target transform).
 * ``MACHLinear``       — the paper-faithful model: R independent B-way
-                         *logistic regressions* over raw features, trained
-                         jointly or per-repetition (embarrassingly parallel).
+                         *logistic regressions* over raw features (dense or
+                         CSR-sparse), trained jointly or per-repetition
+                         (embarrassingly parallel).
 * ``MACHOutputHead``   — the framework feature: drop-in replacement for an
                          LM's d×V softmax head, producing (…, R, B) logits
                          with O(d·R·B) = O(d log K) parameters.
+
+Both trainable heads implement the shared ``MACHHead`` abstraction, so
+``loss`` / ``fused_loss`` / ``predict`` / ``param_count`` are one
+surface from the paper's ODP logistic regression to LM output heads —
+they cannot drift apart, and the fused logit-free training kernels
+(``ops.mach_fused_xent`` / ``ops.mach_fused_xent_csr``) serve both.
 
 Prediction (Algorithm 2) lives in ``estimators.py`` (reference) and
 ``kernels/mach_decode.py`` (fused TPU path).
@@ -17,6 +24,7 @@ Prediction (Algorithm 2) lives in ``estimators.py`` (reference) and
 
 from __future__ import annotations
 
+import abc
 import dataclasses
 import math
 from typing import Any, Optional
@@ -111,9 +119,23 @@ def mach_loss(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
     lbl = jnp.moveaxis(hashed_labels, 0, -1)          # (..., R)
     picked = jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]  # (..., R)
     nll = -jnp.sum(picked, axis=-1)                   # (...,) summed over heads
+    return _weighted_mean(nll, weights)
+
+
+def _weighted_mean(nll: jnp.ndarray,
+                   weights: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Mean per-example loss, optionally masked (all-zero weights -> 0)."""
     if weights is not None:
         return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
     return jnp.mean(nll)
+
+
+def is_sparse_batch(x: Any) -> bool:
+    """Duck-typed CSR batch check (``data.extreme.SparseBatch`` or any
+    object with indptr/indices/values) — core stays import-free of the
+    data layer."""
+    return hasattr(x, "indptr") and hasattr(x, "indices") \
+        and hasattr(x, "values")
 
 
 def mach_meta_probs(logits: jnp.ndarray) -> jnp.ndarray:
@@ -123,19 +145,92 @@ def mach_meta_probs(logits: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# The shared head abstraction: one training/prediction surface from the
+# paper's ODP logistic regression to LM output heads.
+# ---------------------------------------------------------------------------
+
+class MACHHead(abc.ABC):
+    """Abstract base for trainable MACH heads.
+
+    Implementations provide ``init`` / ``head_logits`` / ``fused_loss``
+    / ``param_count``; the base derives ``loss`` (materializing R-head
+    CE on hashed labels), ``meta_probs``, ``predict`` and
+    ``class_probs`` from ``head_logits``, so the two heads share one
+    semantic definition of training and Algorithm-2 decoding.
+
+    ``loss`` materializes the (…, R, B) logits; ``fused_loss`` is the
+    logit-free counterpart (same value and gradients) routed through
+    the fused kernels — implementations pick the dense or CSR-sparse
+    entry point from their input type.
+    """
+
+    cfg: MACHConfig
+
+    @abc.abstractmethod
+    def init(self, key: jax.Array) -> dict:
+        ...
+
+    @abc.abstractmethod
+    def head_logits(self, params: dict, inputs: Any) -> jnp.ndarray:
+        """inputs -> (..., R, B) per-head bucket logits."""
+
+    @abc.abstractmethod
+    def fused_loss(self, params: dict, inputs: Any, labels: jnp.ndarray,
+                   weights: Optional[jnp.ndarray] = None,
+                   use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+        """Logit-free counterpart of ``loss`` (fused projection+CE)."""
+
+    @abc.abstractmethod
+    def param_count(self) -> int:
+        ...
+
+    def loss(self, params: dict, inputs: Any, labels: jnp.ndarray,
+             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        return mach_loss(self.head_logits(params, inputs),
+                         self.cfg.hash_labels(labels), weights)
+
+    def meta_probs(self, params: dict, inputs: Any) -> jnp.ndarray:
+        """getProbability of Algorithm 2: (R, ..., B)."""
+        return mach_meta_probs(self.head_logits(params, inputs))
+
+    def predict(self, params: dict, inputs: Any,
+                estimator: Optional[str] = None) -> jnp.ndarray:
+        table = self.cfg.table()
+        return est.predict_classes(self.meta_probs(params, inputs), table,
+                                   estimator or self.cfg.estimator)
+
+    def class_probs(self, params: dict, inputs: Any,
+                    estimator: Optional[str] = None) -> jnp.ndarray:
+        table = self.cfg.table()
+        return est.estimate_class_probs(self.meta_probs(params, inputs),
+                                        table,
+                                        estimator or self.cfg.estimator)
+
+
+# ---------------------------------------------------------------------------
 # Paper-faithful model: R independent logistic regressions.
 # ---------------------------------------------------------------------------
 
-class MACHLinear:
+class MACHLinear(MACHHead):
     """R B-way logistic regressions on d features — the paper's §4 model.
 
     Parameters: W (d, R, B), b (R, B) — total d·R·B + R·B, i.e. the
     paper's BRd model size versus OAA's Kd.
+
+    Inputs may be dense (n, d) arrays or CSR ``SparseBatch``es (the ODP
+    bag-of-words regime).  With ``fused=True`` the training ``loss``
+    routes through the fused logit-free kernels — dense or CSR entry
+    point by input type, the bias folded in as an always-on unit
+    feature — so the (n, R·B) logits tensor (and for CSR the dense
+    (n, d) activation) never materializes.  The per-repetition
+    slice/merge API (paper §6.1 embarrassing parallelism) is unchanged.
     """
 
-    def __init__(self, cfg: MACHConfig, dim: int):
+    def __init__(self, cfg: MACHConfig, dim: int, fused: bool = False):
         self.cfg = cfg
         self.dim = dim
+        self.fused = fused
 
     def init(self, key: jax.Array) -> dict:
         wkey, _ = jax.random.split(key)
@@ -147,28 +242,51 @@ class MACHLinear:
                            jnp.float32),
         }
 
-    def logits(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
-        """(n, d) -> (n, R, B)."""
+    def head_logits(self, params: dict, x: Any) -> jnp.ndarray:
+        """(n, d) dense or CSR SparseBatch -> (n, R, B)."""
+        if is_sparse_batch(x):
+            x = x.to_dense()          # materializing path only; fused stays sparse
         return jnp.einsum("nd,drb->nrb", x, params["w"]) + params["b"]
 
-    def loss(self, params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-        return mach_loss(self.logits(params, x), self.cfg.hash_labels(y))
+    # back-compat alias (pre-MACHHead name)
+    def logits(self, params: dict, x: Any) -> jnp.ndarray:
+        return self.head_logits(params, x)
 
-    def meta_probs(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
-        """getProbability of Algorithm 2: (R, n, B)."""
-        return mach_meta_probs(self.logits(params, x))
+    def loss(self, params: dict, x: Any, y: jnp.ndarray,
+             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Routes through the fused logit-free path when ``fused=True``
+        (identical value/grads), else materializes the (n, R, B) logits."""
+        if self.fused:
+            return self.fused_loss(params, x, y, weights)
+        return super().loss(params, x, y, weights)
 
-    def predict(self, params: dict, x: jnp.ndarray,
-                estimator: Optional[str] = None) -> jnp.ndarray:
-        table = self.cfg.table()
-        return est.predict_classes(self.meta_probs(params, x), table,
-                                   estimator or self.cfg.estimator)
-
-    def class_probs(self, params: dict, x: jnp.ndarray,
-                    estimator: Optional[str] = None) -> jnp.ndarray:
-        table = self.cfg.table()
-        return est.estimate_class_probs(self.meta_probs(params, x), table,
-                                        estimator or self.cfg.estimator)
+    def fused_loss(self, params: dict, x: Any, y: jnp.ndarray,
+                   weights: Optional[jnp.ndarray] = None,
+                   use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+        """Logit-free loss via ``ops.mach_fused_xent`` (dense x) or
+        ``ops.mach_fused_xent_csr`` (SparseBatch x).  The bias enters as
+        an always-on unit feature so its gradient flows through the same
+        fused dW scatter-add."""
+        from repro.kernels import ops  # deferred: kernels import core
+        c = self.cfg
+        hashed = jnp.moveaxis(c.hash_labels(y), 0, -1)       # (n, R)
+        w2 = params["w"].reshape(self.dim, -1)               # (d, R·B)
+        bias = params["b"].reshape(-1)                       # (R·B,)
+        if is_sparse_batch(x):
+            nll = ops.mach_fused_xent_csr(
+                x.indptr, x.indices, x.values, w2, hashed,
+                num_buckets=c.num_buckets, nnz_max=x.nnz_max, bias=bias,
+                use_pallas=use_pallas, interpret=interpret)
+        else:
+            ha = jnp.concatenate(
+                [x, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
+            wa = jnp.concatenate(
+                [w2, bias[None].astype(w2.dtype)], axis=0)
+            nll = ops.mach_fused_xent(
+                ha, wa, hashed, num_buckets=c.num_buckets,
+                use_pallas=use_pallas, interpret=interpret)
+        return _weighted_mean(nll, weights)
 
     def param_count(self) -> int:
         c = self.cfg
@@ -194,7 +312,7 @@ class MACHLinear:
 # LM integration: MACH output head replacing the d×V softmax.
 # ---------------------------------------------------------------------------
 
-class MACHOutputHead:
+class MACHOutputHead(MACHHead):
     """Drop-in replacement for an LM's unembedding: d -> (R, B) logits.
 
     The kernel is stored as (d, R*B) so the forward pass is a single
@@ -224,10 +342,8 @@ class MACHOutputHead:
         return out.reshape(out.shape[:-1] + (self.cfg.num_repetitions,
                                              self.cfg.num_buckets))
 
-    def loss(self, params: dict, h: jnp.ndarray, labels: jnp.ndarray,
-             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        return mach_loss(self.apply(params, h), self.cfg.hash_labels(labels),
-                         weights)
+    def head_logits(self, params: dict, h: jnp.ndarray) -> jnp.ndarray:
+        return self.apply(params, h)
 
     def fused_loss(self, params: dict, h: jnp.ndarray, labels: jnp.ndarray,
                    weights: Optional[jnp.ndarray] = None,
@@ -243,9 +359,7 @@ class MACHOutputHead:
         nll = ops.mach_fused_xent(h, params["kernel"], hashed,
                                   num_buckets=self.cfg.num_buckets,
                                   use_pallas=use_pallas, interpret=interpret)
-        if weights is not None:
-            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
-        return jnp.mean(nll)
+        return _weighted_mean(nll, weights)
 
     def param_count(self) -> int:
         return self.dim * self.out_features

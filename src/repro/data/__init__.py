@@ -1,5 +1,12 @@
 from repro.data.lm import LMDataConfig, SyntheticLMStream
-from repro.data.extreme import ExtremeDataConfig, ExtremeDataset
+from repro.data.extreme import (
+    ExtremeDataConfig,
+    ExtremeDataset,
+    SparseBatch,
+    SparseExtremeDataConfig,
+    SparseExtremeDataset,
+)
 
 __all__ = ["LMDataConfig", "SyntheticLMStream",
-           "ExtremeDataConfig", "ExtremeDataset"]
+           "ExtremeDataConfig", "ExtremeDataset",
+           "SparseBatch", "SparseExtremeDataConfig", "SparseExtremeDataset"]

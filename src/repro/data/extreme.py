@@ -7,6 +7,14 @@ informative than reproducing one accuracy number — we can verify MACH's
 accuracy as a *fraction of the Bayes accuracy* across (B, R), which is
 the paper's Figure-1 tradeoff with ground truth attached.
 
+Sparse features (the paper's ODP regime — bag-of-words, d=422k,
+~100 nonzeros/doc): ``SparseExtremeDataset`` emits CSR ``SparseBatch``es
+from a Zipf-sparse generator — each class owns a random signature set of
+feature ids, each sample carries those plus Zipf-popular background
+noise features — with the dense fallback (``to_dense`` / ``format=
+"dense"``) retained as the exact densification of the same batch, so
+the fused-CSR and materializing training paths see identical data.
+
 Deterministic: sample i is a pure function of (seed, i); restart-safe
 like data/lm.py.  Class frequencies are Zipf (extreme classification's
 signature long tail — most ODP classes are rare).
@@ -19,6 +27,43 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseBatch:
+    """A CSR batch of sparse feature vectors.
+
+    Row n's features are ``indices[indptr[n]:indptr[n+1]]`` with weights
+    ``values[...]``; duplicate indices within a row sum on
+    densification (scatter-add semantics, matching the fused kernel).
+    ``num_features`` (d) and ``nnz_max`` (longest row — the kernel's
+    static J extent) are aux metadata, so SparseBatch traces through
+    ``jax.jit`` as a pytree with static shape info.
+    """
+
+    indptr: jnp.ndarray     # (N+1,) int32
+    indices: jnp.ndarray    # (nnz,) int32
+    values: jnp.ndarray     # (nnz,) float
+    num_features: int
+    nnz_max: int
+
+    @property
+    def num_rows(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    def to_dense(self) -> jnp.ndarray:
+        """(N, d) densification — the materializing-path fallback."""
+        from repro.kernels.ref import csr_densify_ref  # single source
+        return csr_densify_ref(self.indptr, self.indices, self.values,
+                               self.num_features)
+
+
+jax.tree_util.register_pytree_node(
+    SparseBatch,
+    lambda sb: ((sb.indptr, sb.indices, sb.values),
+                (sb.num_features, sb.nnz_max)),
+    lambda aux, ch: SparseBatch(*ch, *aux),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,3 +119,90 @@ class ExtremeDataset:
             x, y = self.batch_at(10_000 + s, batch_size, "test")
             accs.append(float(jnp.mean(self.bayes_predict(x) == y)))
         return float(np.mean(accs))
+
+
+# ---------------------------------------------------------------------------
+# Zipf-sparse feature generator (the ODP bag-of-words regime).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseExtremeDataConfig:
+    num_classes: int
+    num_features: int            # d — the sparse feature space
+    nnz: int = 32                # nonzeros per example (= nnz_max)
+    sig_features: int = 16       # class-signature features per class
+    noise: float = 0.3           # value scale of background features
+    seed: int = 0
+    zipf_a: float = 1.0          # class-frequency Zipf (0 = uniform)
+    feature_zipf_a: float = 1.0  # background-feature popularity Zipf
+
+    def __post_init__(self):
+        if not 0 < self.sig_features <= self.nnz:
+            raise ValueError("need 0 < sig_features <= nnz")
+
+
+class SparseExtremeDataset:
+    """Each class owns ``sig_features`` random signature feature ids
+    (value 1); each sample carries them plus ``nnz - sig_features``
+    Zipf-popular background features (value ~ noise·U[0,1]), L2
+    normalized.  Linear in the signature indicators, so MACH logistic
+    regression is the right model class — and the CSR batch densifies
+    to exactly the dense fallback, so the fused-CSR and materializing
+    paths train on identical data."""
+
+    def __init__(self, cfg: SparseExtremeDataConfig):
+        self.cfg = cfg
+        ks = jax.random.key(cfg.seed)
+        self.signatures = jax.random.randint(
+            ks, (cfg.num_classes, cfg.sig_features), 0, cfg.num_features)
+        if cfg.zipf_a > 0:
+            ranks = np.arange(1, cfg.num_classes + 1, dtype=np.float64)
+            w = ranks ** (-cfg.zipf_a)
+            self.class_probs = jnp.asarray(w / w.sum(), jnp.float32)
+        else:
+            self.class_probs = None
+        ranks = np.arange(1, cfg.num_features + 1, dtype=np.float64)
+        w = ranks ** (-max(cfg.feature_zipf_a, 0.0))
+        self.feature_probs = jnp.asarray(w / w.sum(), jnp.float32)
+
+    def batch_at(self, step: int, batch_size: int, split: str = "train",
+                 format: str = "csr"):
+        """Returns (SparseBatch, y (B,)) — or the exact densification
+        (x (B, d), y) with ``format="dense"`` (the materializing-path
+        fallback).  Splits use disjoint key spaces; pure in (seed, step).
+        """
+        cfg = self.cfg
+        base = jax.random.fold_in(jax.random.key(cfg.seed + 2),
+                                  {"train": 0, "test": 1}[split])
+        key = jax.random.fold_in(base, step)
+        ky, kn, kv = jax.random.split(key, 3)
+        if self.class_probs is not None:
+            y = jax.random.choice(ky, cfg.num_classes, (batch_size,),
+                                  p=self.class_probs)
+        else:
+            y = jax.random.randint(ky, (batch_size,), 0, cfg.num_classes)
+        n_bg = cfg.nnz - cfg.sig_features
+        sig_ids = self.signatures[y]                     # (B, sig)
+        sig_vals = jnp.ones((batch_size, cfg.sig_features), jnp.float32)
+        if n_bg:
+            bg_ids = jax.random.choice(kn, cfg.num_features,
+                                       (batch_size, n_bg),
+                                       p=self.feature_probs)
+            bg_vals = cfg.noise * jax.random.uniform(kv, (batch_size, n_bg))
+            ids = jnp.concatenate([sig_ids, bg_ids], axis=1)
+            vals = jnp.concatenate([sig_vals, bg_vals], axis=1)
+        else:
+            ids, vals = sig_ids, sig_vals
+        vals = vals / jnp.linalg.norm(vals, axis=1, keepdims=True)
+        batch = SparseBatch(
+            indptr=(jnp.arange(batch_size + 1, dtype=jnp.int32) * cfg.nnz),
+            indices=ids.reshape(-1).astype(jnp.int32),
+            values=vals.reshape(-1),
+            num_features=cfg.num_features,
+            nnz_max=cfg.nnz)
+        if format == "dense":
+            return batch.to_dense(), y.astype(jnp.int32)
+        if format != "csr":
+            raise ValueError(f"format must be csr|dense, got {format!r}")
+        return batch, y.astype(jnp.int32)

@@ -20,20 +20,53 @@ logsumexp completes in its block); when B is larger than the budget a
 block is a bucket-slice of a single head and the online update streams
 the head's logsumexp across blocks.  Both cases run the same body.
 
-The custom VJP recomputes logits tiles (two extra matmuls, the standard
-fused-CE trade) from the saved per-head logsumexp:
+The custom VJP recomputes each logits tile ONCE (the standard fused-CE
+trade) from the saved per-head logsumexp:
 
     dlogits[n, rB+b] = g_n · (softmax(logits)[n, r, b] − 1[b = y_nr])
 
-and accumulates ``dh = dlogits @ Wᵀ`` (N-blocks outer, scratch (bn, d))
-and ``dW = hᵀ @ dlogits`` (column-blocks outer, scratch (d, bc)) in two
-kernels whose grids match their reduction direction.  Activation
-residuals are h and the (N, R) logsumexp — O(N·d), independent of R·B.
+in a single kernel, grid (C/bc, N/bn) with N minor: ``dW_blk = Σ_i
+h_iᵀ @ dlogits`` accumulates in a (d, bc) scratch (N blocks are
+consecutive, flushed at the last), while ``dh_i += dlogits @ W_blkᵀ``
+accumulates into a *revisited* (bn, d) output block — the dh row block
+is visited once per column block, initialized at the first and
+read-modify-written on each revisit, so the running sum rides the
+output windowing.  Activation residuals are h and the (N, R)
+logsumexp — O(N·d), independent of R·B.
+
+Sparse features (the paper's ODP d=422k workload): the ``*_sparse``
+entry points take the batch in padded-ELL form — ``cols/vals (N, J)``,
+row n's features at ``cols[n, :]`` with weights ``vals[n, :]`` (padding
+carries val 0) — as produced from CSR by ``ops.mach_fused_xent_csr``.
+A third grid axis blocks the feature dim: per (row block, column block,
+d block) the active slice of the activation is densified *in VMEM* via
+a one-hot contraction (``A[n, p] = Σ_j vals[n, j]·1[cols[n, j] = d0+p]``,
+MXU/Mosaic-friendly, duplicate ids sum like a CSR scatter-add) and
+``A @ W_blk`` accumulates the logits tile across d blocks; the dense
+(N, d) activation never exists in HBM, and W streams through VMEM
+(bd, bc) tiles — full-d rows are never resident, so d=422k heads fit
+the budget.  The backward runs one fused kernel per the dense design:
+for each tile, a first d-sweep recomputes the logits tile once and
+forms dlogits in scratch, then a second d-sweep scatter-adds
+``dW_blk += A_kᵀ @ dlogits`` into a revisited (dp, C) f32 output
+accumulator — only the rows touched by active features receive nonzero
+updates.  ``vals`` is treated as non-differentiable data (zero
+cotangent): features are inputs, not parameters.
 
 Padding: N pads to bn (padded rows get zero cotangent so contribute
 nothing), heads pad to a multiple of the per-block head count, buckets
 pad to a multiple of the block width; padded columns are masked to
-NEG_INF before the reduction and zeroed in the backward.
+NEG_INF before the reduction and zeroed in the backward.  Sparse
+operands additionally pad J to a lane multiple and d to a multiple of
+the d block (padded slots carry val 0, padded W rows are zero).
+
+Interpret-mode caveat (see ROADMAP): the revisited accumulators rely on
+output blocks being re-fetched on non-consecutive revisits.  Every grid
+here is declared ``dimension_semantics=("arbitrary", ...)`` so Mosaic
+must execute steps sequentially (no parallel reordering across the
+revisited windows); interpret mode executes the re-fetch faithfully but
+cannot vet the native pipelining — validate on real TPU before flipping
+defaults.
 """
 
 from __future__ import annotations
@@ -50,6 +83,24 @@ from repro.kernels.mach_decode import NEG_INF, round_up
 
 _LANE = 128
 
+# Scratch logsumexp state and the revisited dh/dW output accumulators
+# both require grid steps to run in order — declare every grid axis
+# "arbitrary" (sequential) so Mosaic may not parallelize/reorder them.
+_SEQUENTIAL2 = pltpu.TPUCompilerParams(
+    dimension_semantics=("arbitrary", "arbitrary"))
+_SEQUENTIAL3 = pltpu.TPUCompilerParams(
+    dimension_semantics=("arbitrary", "arbitrary", "arbitrary"))
+
+
+def _align_columns(bc_cap: int, r: int, b: int) -> tuple[int, int, int]:
+    """Head-align a column-block budget: (bc, rp, bp).  Either whole
+    heads per block (bc = nh·b, rp padded to a multiple of nh) or
+    bucket-slices of one head (bc | bp, bp the padded per-head width)."""
+    if b <= bc_cap:
+        nh = max(1, min(bc_cap // b, r))
+        return nh * b, round_up(r, nh), b
+    return bc_cap, r, round_up(b, bc_cap)
+
 
 def choose_fused_blocks(n: int, d: int, r: int, b: int,
                         block_n: Optional[int] = None,
@@ -57,11 +108,8 @@ def choose_fused_blocks(n: int, d: int, r: int, b: int,
                         vmem_budget: int = 6 * 2**20
                         ) -> tuple[int, int, int, int]:
     """Pick (bn, bc, rp, bp): N block, column block, padded head count,
-    padded bucket count.  Column blocks are head-aligned — either
-    ``bc = nh·b`` (nh whole heads per block, ``rp`` padded to a multiple
-    of nh) or ``bc | bp`` (bucket-slices of one head, ``bp`` the padded
-    per-head width).  Budget covers the W tile, the logits tile and the
-    backward accumulators, all f32."""
+    padded bucket count.  Budget covers the W tile, the logits tile and
+    the backward accumulators, all f32."""
     bn = block_n or min(128, max(8, n))
     bn = max(8, round_up(bn, 8))
     if block_c is not None:
@@ -69,14 +117,45 @@ def choose_fused_blocks(n: int, d: int, r: int, b: int,
     else:
         bc_cap = vmem_budget // (4 * (2 * d + 2 * bn))
         bc_cap = int(min(max(bc_cap // _LANE * _LANE, _LANE), 2048))
-    if b <= bc_cap:
-        nh = max(1, min(bc_cap // b, r))
-        bc, bp = nh * b, b
-        rp = round_up(r, nh)
-    else:
-        bc, rp = bc_cap, r
-        bp = round_up(b, bc)
+    bc, rp, bp = _align_columns(bc_cap, r, b)
     return bn, bc, rp, bp
+
+
+def choose_sparse_blocks(n: int, d: int, r: int, b: int, j: int,
+                         block_n: Optional[int] = None,
+                         block_c: Optional[int] = None,
+                         block_d: Optional[int] = None,
+                         vmem_budget: int = 6 * 2**20
+                         ) -> tuple[int, int, int, int, int, int]:
+    """Pick (bn, bc, bd, rp, bp, jp) for the sparse kernels.  The
+    densified (bn, jp, bd) one-hot tile is the VMEM driver: bn shrinks
+    first as jp (the padded nnz) grows, then bd drops below a full lane
+    block (to the 8-sublane floor) so the tile stays under half the
+    budget even at bag-of-words nnz (~1k)."""
+    jp = round_up(max(j, 1), _LANE)
+    # the densify body holds ~two f32 (bn, jp, bd) intermediates, so
+    # size them to half the budget together: 2·4·bn·jp·bd <= budget/2
+    if block_n is not None:
+        bn = max(8, round_up(block_n, 8))
+    else:
+        bn_cap = vmem_budget // (4 * 4 * jp * _LANE)   # bd >= one lane
+        bn = min(16, max(8, n), max(8, bn_cap // 8 * 8))
+    if block_d is not None:
+        bd = max(8, round_up(block_d, 8))
+    else:
+        bd = vmem_budget // (4 * 4 * bn * jp)
+        if bd >= _LANE:
+            bd = int(min(bd // _LANE * _LANE, 512))
+        else:
+            # one-hot tile can't afford a full lane block: sublane floor
+            bd = int(max(bd // 8 * 8, 8))
+    if block_c is not None:
+        bc_cap = max(1, block_c)
+    else:
+        bc_cap = vmem_budget // (4 * (bd + 4 * bn))
+        bc_cap = int(min(max(bc_cap // _LANE * _LANE, _LANE), 2048))
+    bc, rp, bp = _align_columns(bc_cap, r, b)
+    return bn, bc, bd, rp, bp, jp
 
 
 def _pad_operands(h2, w, labels, r, b, bn, rp, bp):
@@ -94,6 +173,23 @@ def _pad_operands(h2, w, labels, r, b, bn, rp, bp):
     return h2, w3.reshape(d, rp * bp), labels
 
 
+def _pad_sparse_operands(cols, vals, w, labels, r, b, bn, rp, bp, bd, jp):
+    """ELL (cols/vals (N,J)), w (d,R·B), y (N,R) -> padded (cols/vals
+    (Np,jp), w (dp,rp·bp), y (Np,rp), dp).  Padded slots carry val 0 so
+    they contribute nothing regardless of their col id."""
+    n, j = cols.shape
+    d = w.shape[0]
+    dp = round_up(d, bd)
+    npad = -n % bn
+    cols = jnp.pad(cols.astype(jnp.int32), ((0, npad), (0, jp - j)))
+    vals = jnp.pad(vals, ((0, npad), (0, jp - j)))
+    labels = jnp.pad(labels.astype(jnp.int32), ((0, npad), (0, 0)))
+    labels = jnp.pad(labels, ((0, 0), (0, rp - r)))
+    w3 = w.reshape(d, r, b)
+    w3 = jnp.pad(w3, ((0, dp - d), (0, rp - r), (0, bp - b)))
+    return cols, vals, w3.reshape(dp, rp * bp), labels, dp
+
+
 def _tile_geometry(bc, bp, kblk):
     """Static (nh, width) + traced (h0, boff) for the current column
     block.  nh heads of ``width`` buckets each; h0 the first head id,
@@ -106,16 +202,81 @@ def _tile_geometry(bc, bp, kblk):
     return nh, width, h0, boff
 
 
-def _masked_tile(h_ref, w_ref, bn, nh, width, boff, b):
-    """Logits tile (bn, nh, width) in f32, padded buckets at NEG_INF.
-    Returns (tile3, bidx) — bidx the per-position bucket id."""
-    tile = jnp.dot(h_ref[...].astype(jnp.float32),
-                   w_ref[...].astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
+def _mask_tile3(tile, bn, nh, width, boff, b):
+    """(bn, nh·width) f32 logits tile -> ((bn, nh, width) with padded
+    buckets at NEG_INF, per-position bucket ids)."""
     tile3 = tile.reshape(bn, nh, width)
     bidx = boff + jax.lax.broadcasted_iota(jnp.int32, (bn, nh, width), 2)
     return jnp.where(bidx < b, tile3, NEG_INF), bidx
 
+
+def _masked_tile(h_ref, w_ref, bn, nh, width, boff, b):
+    """Dense logits tile (bn, nh, width) in f32 via h @ W."""
+    tile = jnp.dot(h_ref[...].astype(jnp.float32),
+                   w_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return _mask_tile3(tile, bn, nh, width, boff, b)
+
+
+def _densify_tile(cols_ref, vals_ref, d0, bn, jp, bd):
+    """In-VMEM densified activation slice A (bn, bd) for feature range
+    [d0, d0+bd): A[n, p] = Σ_j vals[n, j]·1[cols[n, j] = d0+p].  A
+    one-hot contraction (no gather — Mosaic-friendly); duplicate ids
+    within a row sum, matching a CSR scatter-add; padded slots carry
+    val 0 so their col id is irrelevant."""
+    local = cols_ref[...].astype(jnp.int32) - d0                # (bn, jp)
+    oh = (local[:, :, None] ==
+          jax.lax.broadcasted_iota(jnp.int32, (bn, jp, bd), 2))
+    weighted = oh.astype(jnp.float32) \
+        * vals_ref[...].astype(jnp.float32)[:, :, None]
+    return jnp.sum(weighted, axis=1)                            # (bn, bd)
+
+
+def _online_update(tile3, bidx, y_ref, m_scr, s_scr, p_scr, h0, nh):
+    """Online per-head (max, sumexp, picked) accumulation on the nh
+    heads this column block touches."""
+    y_blk = y_ref[:, pl.ds(h0, nh)]                           # (bn, nh)
+    onehot = (bidx == y_blk[:, :, None]).astype(jnp.float32)
+    picked = jnp.sum(tile3 * onehot, axis=2)                  # (bn, nh)
+    m_old = m_scr[:, pl.ds(h0, nh)]
+    s_old = s_scr[:, pl.ds(h0, nh)]
+    m_new = jnp.maximum(m_old, jnp.max(tile3, axis=2))
+    s_new = s_old * jnp.exp(m_old - m_new) \
+        + jnp.sum(jnp.exp(tile3 - m_new[:, :, None]), axis=2)
+    m_scr[:, pl.ds(h0, nh)] = m_new
+    s_scr[:, pl.ds(h0, nh)] = s_new
+    p_scr[:, pl.ds(h0, nh)] = p_scr[:, pl.ds(h0, nh)] + picked
+
+
+def _flush_stats(r, loss_ref, lse_ref, m_scr, s_scr, p_scr):
+    """Final reduction: per-head logsumexp -> summed CE + saved lse."""
+    lse = m_scr[...] + jnp.log(s_scr[...])                    # (bn, rp)
+    head_ok = jax.lax.broadcasted_iota(jnp.int32, lse.shape, 1) < r
+    loss_ref[...] = jnp.sum(
+        jnp.where(head_ok, lse - p_scr[...], 0.0),
+        axis=1, keepdims=True)
+    lse_ref[...] = jnp.where(head_ok, lse, 0.0)
+
+
+def _dlogits_from_tile(tile3, bidx, y_ref, lse_ref, g_ref, r, b, h0, nh,
+                       width):
+    """g·(softmax − onehot) from a masked logits tile, zeroed at padded
+    heads/buckets.  Returns (bn, nh·width) f32."""
+    bn = tile3.shape[0]
+    y_blk = y_ref[:, pl.ds(h0, nh)]
+    lse_blk = lse_ref[:, pl.ds(h0, nh)]                       # (bn, nh)
+    p = jnp.exp(tile3 - lse_blk[:, :, None])                  # softmax
+    onehot = (bidx == y_blk[:, :, None]).astype(jnp.float32)
+    head_ok = (h0 + jax.lax.broadcasted_iota(
+        jnp.int32, (bn, nh, width), 1)) < r
+    dtile3 = jnp.where((bidx < b) & head_ok,
+                       g_ref[...][:, :, None] * (p - onehot), 0.0)
+    return dtile3.reshape(bn, nh * width)
+
+
+# ---------------------------------------------------------------------------
+# Dense-h kernel bodies
+# ---------------------------------------------------------------------------
 
 def _fwd_body(bn, bc, r, rp, b, bp,
               h_ref, w_ref, y_ref, loss_ref, lse_ref,
@@ -133,92 +294,160 @@ def _fwd_body(bn, bc, r, rp, b, bp,
         p_scr[...] = jnp.zeros((bn, rp), jnp.float32)
 
     tile3, bidx = _masked_tile(h_ref, w_ref, bn, nh, width, boff, b)
-    y_blk = y_ref[:, pl.ds(h0, nh)]                           # (bn, nh)
-    onehot = (bidx == y_blk[:, :, None]).astype(jnp.float32)
-    picked = jnp.sum(tile3 * onehot, axis=2)                  # (bn, nh)
-
-    # online logsumexp update on the nh heads this block touches
-    m_old = m_scr[:, pl.ds(h0, nh)]
-    s_old = s_scr[:, pl.ds(h0, nh)]
-    m_new = jnp.maximum(m_old, jnp.max(tile3, axis=2))
-    s_new = s_old * jnp.exp(m_old - m_new) \
-        + jnp.sum(jnp.exp(tile3 - m_new[:, :, None]), axis=2)
-    m_scr[:, pl.ds(h0, nh)] = m_new
-    s_scr[:, pl.ds(h0, nh)] = s_new
-    p_scr[:, pl.ds(h0, nh)] = p_scr[:, pl.ds(h0, nh)] + picked
+    _online_update(tile3, bidx, y_ref, m_scr, s_scr, p_scr, h0, nh)
 
     @pl.when(kblk == nkb - 1)
     def _flush():
-        lse = m_scr[...] + jnp.log(s_scr[...])                # (bn, rp)
-        head_ok = jax.lax.broadcasted_iota(jnp.int32, (bn, rp), 1) < r
-        loss_ref[...] = jnp.sum(
-            jnp.where(head_ok, lse - p_scr[...], 0.0),
-            axis=1, keepdims=True)
-        lse_ref[...] = jnp.where(head_ok, lse, 0.0)
+        _flush_stats(r, loss_ref, lse_ref, m_scr, s_scr, p_scr)
 
 
 def _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
                   bn, bc, r, b, bp, kblk):
-    """Recompute the logits tile and form g·(softmax − onehot),
-    zeroed at padded heads/buckets.  Returns (bn, bc) f32."""
+    """Recompute the dense logits tile and form g·(softmax − onehot)."""
     nh, width, h0, boff = _tile_geometry(bc, bp, kblk)
     tile3, bidx = _masked_tile(h_ref, w_ref, bn, nh, width, boff, b)
-    y_blk = y_ref[:, pl.ds(h0, nh)]
-    lse_blk = lse_ref[:, pl.ds(h0, nh)]                       # (bn, nh)
-    p = jnp.exp(tile3 - lse_blk[:, :, None])                  # softmax
-    onehot = (bidx == y_blk[:, :, None]).astype(jnp.float32)
-    head_ok = (h0 + jax.lax.broadcasted_iota(
-        jnp.int32, (bn, nh, width), 1)) < r
-    dtile3 = jnp.where((bidx < b) & head_ok,
-                       g_ref[...][:, :, None] * (p - onehot), 0.0)
-    return dtile3.reshape(bn, bc)
+    return _dlogits_from_tile(tile3, bidx, y_ref, lse_ref, g_ref, r, b,
+                              h0, nh, width)
 
 
-def _bwd_dh_body(bn, bc, d, r, rp, b, bp,
-                 h_ref, w_ref, y_ref, lse_ref, g_ref, dh_ref, acc):
-    """dh = Σ_colblocks dlogits_tile @ W_blkᵀ;  grid (N/bn, C/bc)."""
-    kblk = pl.program_id(1)
-    nkb = pl.num_programs(1)
+def _bwd_body(bn, bc, d, r, rp, b, bp,
+              h_ref, w_ref, y_ref, lse_ref, g_ref,
+              dh_ref, dw_ref, dw_acc):
+    """Single-recompute backward;  grid (C/bc, N/bn), N minor.
 
-    @pl.when(kblk == 0)
-    def _init():
-        acc[...] = jnp.zeros((bn, d), jnp.float32)
-
-    dtile = _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
-                          bn, bc, r, b, bp, kblk)
-    acc[...] += jax.lax.dot_general(
-        dtile, w_ref[...].astype(jnp.float32),
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)                   # (bn, d)
-
-    @pl.when(kblk == nkb - 1)
-    def _flush():
-        dh_ref[...] = acc[...].astype(dh_ref.dtype)
-
-
-def _bwd_dw_body(bn, bc, d, r, rp, b, bp,
-                 h_ref, w_ref, y_ref, lse_ref, g_ref, dw_ref, acc):
-    """dW_blk = Σ_nblocks h_blkᵀ @ dlogits_tile;  grid (C/bc, N/bn) —
-    N minor so the (d, bc) accumulator sees all N blocks in order."""
+    Per step the dlogits tile is formed ONCE and feeds both grads:
+    dW_blk = Σ_i h_iᵀ @ dlogits accumulates in (d, bc) scratch (the N
+    blocks are consecutive, flushed at the last); dh_i += dlogits @
+    W_blkᵀ accumulates through the revisited (bn, d) output block —
+    initialized at the first column block, read-modify-written on each
+    revisit (f32; cast to h's dtype happens outside)."""
     kblk = pl.program_id(0)
     iblk = pl.program_id(1)
     nib = pl.num_programs(1)
 
     @pl.when(iblk == 0)
     def _init():
-        acc[...] = jnp.zeros((d, bc), jnp.float32)
+        dw_acc[...] = jnp.zeros((d, bc), jnp.float32)
 
     dtile = _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
                           bn, bc, r, b, bp, kblk)
-    acc[...] += jax.lax.dot_general(
+    dw_acc[...] += jax.lax.dot_general(
         h_ref[...].astype(jnp.float32), dtile,
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                   # (d, bc)
+    dh_contrib = jax.lax.dot_general(
+        dtile, w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (bn, d)
+
+    @pl.when(kblk == 0)
+    def _dh_first():
+        dh_ref[...] = dh_contrib
+
+    @pl.when(kblk > 0)
+    def _dh_acc():
+        dh_ref[...] += dh_contrib
 
     @pl.when(iblk == nib - 1)
     def _flush():
-        dw_ref[...] = acc[...].astype(dw_ref.dtype)
+        dw_ref[...] = dw_acc[...].astype(dw_ref.dtype)
 
+
+# ---------------------------------------------------------------------------
+# Sparse-h (padded-ELL) kernel bodies
+# ---------------------------------------------------------------------------
+
+def _sparse_fwd_body(bn, bc, bd, r, rp, b, bp, jp,
+                     cols_ref, vals_ref, w_ref, y_ref, loss_ref, lse_ref,
+                     acc_scr, m_scr, s_scr, p_scr):
+    """Forward;  grid (N/bn, C/bc, D/bd), d minor.  The logits tile
+    accumulates over d blocks in (bn, bc) scratch from in-VMEM densified
+    activation slices; the online reduction fires once per column block
+    at the last d block."""
+    jblk = pl.program_id(1)
+    kd = pl.program_id(2)
+    njb = pl.num_programs(1)
+    nkd = pl.num_programs(2)
+
+    @pl.when((jblk == 0) & (kd == 0))
+    def _init_stats():
+        m_scr[...] = jnp.full((bn, rp), NEG_INF, jnp.float32)
+        s_scr[...] = jnp.zeros((bn, rp), jnp.float32)
+        p_scr[...] = jnp.zeros((bn, rp), jnp.float32)
+
+    @pl.when(kd == 0)
+    def _init_acc():
+        acc_scr[...] = jnp.zeros((bn, bc), jnp.float32)
+
+    a = _densify_tile(cols_ref, vals_ref, kd * bd, bn, jp, bd)
+    acc_scr[...] += jnp.dot(a, w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kd == nkd - 1)
+    def _reduce():
+        nh, width, h0, boff = _tile_geometry(bc, bp, jblk)
+        tile3, bidx = _mask_tile3(acc_scr[...], bn, nh, width, boff, b)
+        _online_update(tile3, bidx, y_ref, m_scr, s_scr, p_scr, h0, nh)
+
+        @pl.when(jblk == njb - 1)
+        def _flush():
+            _flush_stats(r, loss_ref, lse_ref, m_scr, s_scr, p_scr)
+
+
+def _sparse_bwd_body(bn, bc, bd, nkd, r, rp, b, bp, jp,
+                     cols_ref, vals_ref, w_ref, y_ref, lse_ref,
+                     g_ref, dw_ref, acc_scr, dlog_scr):
+    """Single-recompute backward;  grid (C/bc, N/bn, 2·D/bd).
+
+    Per (column block, row block) the d axis is swept twice: phase 1
+    (k2 < nkd) rebuilds the logits tile once and forms dlogits into
+    scratch at its last step; phase 2 scatter-adds dW_blk += A_kᵀ @
+    dlogits through the revisited output block — initialized at the
+    first row block, read-modify-written on later revisits (phase-1
+    steps map the same block but leave it untouched).  Only W rows hit
+    by active features receive nonzero updates — a sparse scatter-add
+    at (bd, bc) granularity."""
+    jblk = pl.program_id(0)
+    iblk = pl.program_id(1)
+    k2 = pl.program_id(2)
+
+    @pl.when(k2 < nkd)
+    def _logits_phase():
+        @pl.when(k2 == 0)
+        def _init():
+            acc_scr[...] = jnp.zeros((bn, bc), jnp.float32)
+
+        a = _densify_tile(cols_ref, vals_ref, k2 * bd, bn, jp, bd)
+        acc_scr[...] += jnp.dot(a, w_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(k2 == nkd - 1)
+        def _dlog():
+            nh, width, h0, boff = _tile_geometry(bc, bp, jblk)
+            tile3, bidx = _mask_tile3(acc_scr[...], bn, nh, width, boff, b)
+            dlog_scr[...] = _dlogits_from_tile(
+                tile3, bidx, y_ref, lse_ref, g_ref, r, b, h0, nh, width)
+
+    @pl.when(k2 >= nkd)
+    def _dw_phase():
+        a = _densify_tile(cols_ref, vals_ref, (k2 - nkd) * bd, bn, jp, bd)
+        contrib = jax.lax.dot_general(
+            a, dlog_scr[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bd, bc)
+
+        @pl.when(iblk == 0)
+        def _dw_first():
+            dw_ref[...] = contrib
+
+        @pl.when(iblk > 0)
+        def _dw_acc():
+            dw_ref[...] += contrib
+
+
+# ---------------------------------------------------------------------------
+# Dense-h entry point
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def mach_fused_xent_pallas(h2: jnp.ndarray, w: jnp.ndarray,
@@ -238,7 +467,7 @@ def mach_fused_xent_pallas(h2: jnp.ndarray, w: jnp.ndarray,
 
 
 def _fused_call(kind, h2p, wp, yp, lsep, gp, dims, bn, bc, interpret):
-    """Shared pallas_call builder for the three passes."""
+    """Shared pallas_call builder for the dense forward/backward."""
     npad, d, r, rp, b, bp, c = dims
     n_spec = pl.BlockSpec((bn, d), lambda i, j: (i, 0))
     w_spec = pl.BlockSpec((d, bc), lambda i, j: (0, j))
@@ -252,31 +481,23 @@ def _fused_call(kind, h2p, wp, yp, lsep, gp, dims, bn, bc, interpret):
             out_shape=(jax.ShapeDtypeStruct((npad, 1), jnp.float32),
                        jax.ShapeDtypeStruct((npad, rp), jnp.float32)),
             scratch_shapes=[pltpu.VMEM((bn, rp), jnp.float32)] * 3,
+            compiler_params=_SEQUENTIAL2,
             interpret=interpret,
         )(h2p, wp, yp)
-    if kind == "dh":
-        return pl.pallas_call(
-            functools.partial(_bwd_dh_body, bn, bc, d, r, rp, b, bp),
-            grid=(npad // bn, c // bc),
-            in_specs=[n_spec, w_spec, row_spec(rp), row_spec(rp),
-                      row_spec(1)],
-            out_specs=n_spec,
-            out_shape=jax.ShapeDtypeStruct((npad, d), h2p.dtype),
-            scratch_shapes=[pltpu.VMEM((bn, d), jnp.float32)],
-            interpret=interpret,
-        )(h2p, wp, yp, lsep, gp)
-    # dW: column blocks outer, N minor
+    # bwd: column blocks outer, N minor; dh a revisited accumulator
+    cn_spec = pl.BlockSpec((bn, d), lambda j, i: (i, 0))
     cw_spec = pl.BlockSpec((d, bc), lambda j, i: (0, j))
+    crow_spec = lambda width: pl.BlockSpec((bn, width), lambda j, i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_bwd_dw_body, bn, bc, d, r, rp, b, bp),
+        functools.partial(_bwd_body, bn, bc, d, r, rp, b, bp),
         grid=(c // bc, npad // bn),
-        in_specs=[pl.BlockSpec((bn, d), lambda j, i: (i, 0)), cw_spec,
-                  pl.BlockSpec((bn, rp), lambda j, i: (i, 0)),
-                  pl.BlockSpec((bn, rp), lambda j, i: (i, 0)),
-                  pl.BlockSpec((bn, 1), lambda j, i: (i, 0))],
-        out_specs=cw_spec,
-        out_shape=jax.ShapeDtypeStruct((d, c), wp.dtype),
+        in_specs=[cn_spec, cw_spec, crow_spec(rp), crow_spec(rp),
+                  crow_spec(1)],
+        out_specs=(cn_spec, cw_spec),
+        out_shape=(jax.ShapeDtypeStruct((npad, d), jnp.float32),
+                   jax.ShapeDtypeStruct((d, c), wp.dtype)),
         scratch_shapes=[pltpu.VMEM((d, bc), jnp.float32)],
+        compiler_params=_SEQUENTIAL2,
         interpret=interpret,
     )(h2p, wp, yp, lsep, gp)
 
@@ -315,12 +536,134 @@ def _fused_bwd(num_buckets, block_n, block_c, interpret, res, g):
     gp = jnp.pad(g.astype(jnp.float32).reshape(n, 1),
                  ((0, npad - n), (0, 0)))
     lsep = jnp.pad(lse, ((0, npad - n), (0, 0)))
-    dh = _fused_call("dh", h2p, wp, yp, lsep, gp, dims, bn, bc,
-                     interpret)[:n]
-    dwp = _fused_call("dw", h2p, wp, yp, lsep, gp, dims, bn, bc,
-                      interpret)
+    dhp, dwp = _fused_call("bwd", h2p, wp, yp, lsep, gp, dims, bn, bc,
+                           interpret)
+    dh = dhp[:n].astype(h2.dtype)
     dw = dwp.reshape(d, rp, bp)[:, :r, :b].reshape(d, r * b)
     return dh, dw, None
 
 
 mach_fused_xent_pallas.defvjp(_fused_fwd, _fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-h (padded-ELL) entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def mach_fused_xent_sparse_pallas(cols: jnp.ndarray, vals: jnp.ndarray,
+                                  w: jnp.ndarray,
+                                  hashed_labels: jnp.ndarray,
+                                  num_buckets: int,
+                                  block_n: Optional[int] = None,
+                                  block_c: Optional[int] = None,
+                                  block_d: Optional[int] = None,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """Per-example summed R-head CE from a padded-ELL sparse batch.
+
+    cols/vals (N, J) — row n's active feature ids and weights (padding
+    carries val 0; duplicate ids sum); w (d, R·B); hashed_labels (N, R)
+    int32 -> (N,) f32.  Neither the (N, R·B) logits tensor nor a dense
+    (N, d) activation ever exists in HBM in either pass.  Differentiable
+    wrt w only — ``vals`` is data, not a parameter, and receives a zero
+    cotangent (use the densified reference if you need feature grads)."""
+    out, _ = _sparse_fwd(cols, vals, w, hashed_labels, num_buckets,
+                         block_n, block_c, block_d, interpret)
+    return out
+
+
+def _sparse_call(kind, colsp, valsp, wp, yp, lsep, gp, dims, bn, bc, bd,
+                 jp, interpret):
+    """Shared pallas_call builder for the sparse forward/backward."""
+    npad, dp, r, rp, b, bp, c = dims
+    nkd = dp // bd
+    if kind == "fwd":
+        ell_spec = pl.BlockSpec((bn, jp), lambda i, j, k: (i, 0))
+        w_spec = pl.BlockSpec((bd, bc), lambda i, j, k: (k, j))
+        row_spec = lambda width: pl.BlockSpec((bn, width),
+                                              lambda i, j, k: (i, 0))
+        return pl.pallas_call(
+            functools.partial(_sparse_fwd_body, bn, bc, bd, r, rp, b, bp,
+                              jp),
+            grid=(npad // bn, c // bc, nkd),
+            in_specs=[ell_spec, ell_spec, w_spec, row_spec(rp)],
+            out_specs=(row_spec(1), row_spec(rp)),
+            out_shape=(jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+                       jax.ShapeDtypeStruct((npad, rp), jnp.float32)),
+            scratch_shapes=[pltpu.VMEM((bn, bc), jnp.float32)]
+            + [pltpu.VMEM((bn, rp), jnp.float32)] * 3,
+            compiler_params=_SEQUENTIAL3,
+            interpret=interpret,
+        )(colsp, valsp, wp, yp)
+    # bwd: both phases of a (j, i) cell map the same dW/W d-block
+    kmap = lambda k2: jnp.where(k2 >= nkd, k2 - nkd, k2)
+    dw_spec = pl.BlockSpec((bd, bc), lambda j, i, k2: (kmap(k2), j))
+    ell_spec = pl.BlockSpec((bn, jp), lambda j, i, k2: (i, 0))
+    row_spec = lambda width: pl.BlockSpec((bn, width),
+                                          lambda j, i, k2: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sparse_bwd_body, bn, bc, bd, nkd, r, rp, b, bp,
+                          jp),
+        grid=(c // bc, npad // bn, 2 * nkd),
+        in_specs=[ell_spec, ell_spec, dw_spec, row_spec(rp),
+                  row_spec(rp), row_spec(1)],
+        out_specs=dw_spec,
+        out_shape=jax.ShapeDtypeStruct((dp, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bc), jnp.float32),
+                        pltpu.VMEM((bn, bc), jnp.float32)],
+        compiler_params=_SEQUENTIAL3,
+        interpret=interpret,
+    )(colsp, valsp, wp, yp, lsep, gp)
+
+
+def _check_sparse_shapes(cols, vals, w, hashed_labels, num_buckets):
+    n, j = cols.shape
+    d = w.shape[0]
+    r = hashed_labels.shape[-1]
+    if vals.shape != (n, j):
+        raise ValueError(f"vals {vals.shape} vs cols {cols.shape}")
+    if hashed_labels.shape != (n, r):
+        raise ValueError(f"labels {hashed_labels.shape} vs cols "
+                         f"{cols.shape}")
+    if w.shape != (d, r * num_buckets):
+        raise ValueError(f"w {w.shape} != ({d}, {r}*{num_buckets})")
+    return n, d, r, j
+
+
+def _sparse_fwd(cols, vals, w, hashed_labels, num_buckets, block_n,
+                block_c, block_d, interpret):
+    n, d, r, j = _check_sparse_shapes(cols, vals, w, hashed_labels,
+                                      num_buckets)
+    b = num_buckets
+    bn, bc, bd, rp, bp, jp = choose_sparse_blocks(n, d, r, b, j, block_n,
+                                                  block_c, block_d)
+    colsp, valsp, wp, yp, dp = _pad_sparse_operands(
+        cols, vals, w, hashed_labels, r, b, bn, rp, bp, bd, jp)
+    dims = (colsp.shape[0], dp, r, rp, b, bp, rp * bp)
+    loss, lse = _sparse_call("fwd", colsp, valsp, wp, yp, None, None,
+                             dims, bn, bc, bd, jp, interpret)
+    return loss[:n, 0], (cols, vals, w, hashed_labels, lse[:n])
+
+
+def _sparse_bwd(num_buckets, block_n, block_c, block_d, interpret, res, g):
+    cols, vals, w, hashed_labels, lse = res
+    n, d, r, j = _check_sparse_shapes(cols, vals, w, hashed_labels,
+                                      num_buckets)
+    b = num_buckets
+    bn, bc, bd, rp, bp, jp = choose_sparse_blocks(n, d, r, b, j, block_n,
+                                                  block_c, block_d)
+    colsp, valsp, wp, yp, dp = _pad_sparse_operands(
+        cols, vals, w, hashed_labels, r, b, bn, rp, bp, bd, jp)
+    npad = colsp.shape[0]
+    dims = (npad, dp, r, rp, b, bp, rp * bp)
+    gp = jnp.pad(g.astype(jnp.float32).reshape(n, 1),
+                 ((0, npad - n), (0, 0)))
+    lsep = jnp.pad(lse, ((0, npad - n), (0, 0)))
+    dwp = _sparse_call("bwd", colsp, valsp, wp, yp, lsep, gp, dims, bn,
+                       bc, bd, jp, interpret)
+    dw = dwp.reshape(dp, rp, bp)[:d, :r, :b].reshape(d, r * b)
+    # features are data: zero cotangent for vals, none for int cols/labels
+    return None, jnp.zeros_like(vals), dw.astype(w.dtype), None
+
+
+mach_fused_xent_sparse_pallas.defvjp(_sparse_fwd, _sparse_bwd)

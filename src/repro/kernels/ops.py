@@ -14,10 +14,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.mach_decode import mach_decode_pallas
-from repro.kernels.mach_fused_xent import mach_fused_xent_pallas
+from repro.kernels.mach_fused_xent import (mach_fused_xent_pallas,
+                                           mach_fused_xent_sparse_pallas)
 from repro.kernels.mach_topk import mach_topk_pallas
 from repro.kernels.mach_xent import mach_xent_pallas
 from repro.kernels.lru_scan import lru_scan_pallas
@@ -154,6 +156,94 @@ def mach_xent(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
     return out.reshape(lead)
 
 
+def csr_to_ell(indptr: jnp.ndarray, indices: jnp.ndarray,
+               values: jnp.ndarray, nnz_max: int, num_features: int
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """CSR -> padded ELL (cols (N, nnz_max) int32, vals (N, nnz_max)).
+
+    Row n's entries land in slots [0, len_n); padded slots carry col id
+    ``num_features`` (an always-out-of-range sentinel) and val 0, so
+    they contribute nothing however the kernel tiles the feature dim.
+    ``nnz_max`` must be static and >= the longest row — it sets the
+    kernel's J extent, and rows longer than it would be silently
+    truncated (diverging from the densifying reference), so an
+    undersized ``nnz_max`` is rejected whenever ``indptr`` is concrete
+    (traced indptr — e.g. inside a jitted train step — relies on the
+    producer honoring the contract, as ``SparseExtremeDataset`` does).
+    Differentiable wrt ``values`` (a pure gather)."""
+    n = indptr.shape[0] - 1
+    nnz = indices.shape[0]
+    if n and not isinstance(indptr, jax.core.Tracer):
+        longest = int(np.max(np.diff(np.asarray(indptr))))
+        if longest > nnz_max:
+            raise ValueError(
+                f"nnz_max={nnz_max} < longest CSR row ({longest}): the "
+                f"kernel would silently truncate it")
+    if nnz == 0:
+        return (jnp.full((n, nnz_max), num_features, jnp.int32),
+                jnp.zeros((n, nnz_max), values.dtype))
+    slot = jnp.arange(nnz_max, dtype=indptr.dtype)
+    pos = indptr[:-1, None] + slot[None, :]               # (N, nnz_max)
+    valid = pos < indptr[1:, None]
+    posc = jnp.minimum(pos, nnz - 1)
+    cols = jnp.where(valid, indices[posc].astype(jnp.int32), num_features)
+    vals = jnp.where(valid, values[posc], 0)
+    return cols, vals
+
+
+def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
+                        values: jnp.ndarray, w: jnp.ndarray,
+                        hashed_labels: jnp.ndarray,
+                        *, num_buckets: int, nnz_max: int,
+                        bias: Optional[jnp.ndarray] = None,
+                        use_pallas: Optional[bool] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sparse-feature fused projection + R-head CE (the ODP d=422k
+    training path).
+
+    indptr (N+1,), indices (nnz,), values (nnz,) — a CSR batch over d
+    features; w (d, R·B) head kernel; hashed_labels (N, R) bucket ids;
+    optional bias (R·B,) folded in as an always-on unit feature ->
+    (N,) f32 per-example loss.  The bias column makes the kernel's ELL
+    width nnz_max+1, so keep nnz_max off lane multiples (129 pads to
+    256 lanes, doubling the densify-tile work; 120 -> 121 pads to 128).
+
+    On the Pallas path neither the (N, R·B) logits tensor nor a dense
+    (N, d) activation ever exists in HBM in either pass — the batch is
+    re-laid-out as padded ELL (O(N·nnz_max)), activation slices are
+    densified per tile in VMEM, and the VJP scatter-adds dW without a
+    logits round-trip.  The fallback is the densifying reference — the
+    right CPU algorithm, and the parity oracle.  Differentiable wrt w
+    and bias; ``values`` gets a ZERO cotangent on the kernel path
+    (features are data — use the reference if you need feature grads).
+    """
+    d = w.shape[0]
+    r = hashed_labels.shape[-1]
+    if w.shape != (d, r * num_buckets):
+        raise ValueError(f"w {w.shape} != ({d}, {r}*{num_buckets})")
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        # stop_gradient matches the kernel path's zero cotangent for
+        # values (features are data, not parameters) — without it the
+        # two backends would silently disagree on d/d(values)
+        return ref.mach_fused_xent_csr_ref(
+            indptr, indices, jax.lax.stop_gradient(values), w,
+            hashed_labels.astype(jnp.int32), num_buckets, bias=bias)
+    cols, vals = csr_to_ell(indptr, indices, values, nnz_max, d)
+    if bias is not None:
+        n = cols.shape[0]
+        cols = jnp.concatenate(
+            [cols, jnp.full((n, 1), d, jnp.int32)], axis=1)
+        vals = jnp.concatenate(
+            [vals, jnp.ones((n, 1), vals.dtype)], axis=1)
+        w = jnp.concatenate(
+            [w, bias.reshape(1, -1).astype(w.dtype)], axis=0)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return mach_fused_xent_sparse_pallas(
+        cols, vals, w, hashed_labels.astype(jnp.int32), num_buckets,
+        None, None, None, interp)
+
+
 def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
                     hashed_labels: jnp.ndarray,
                     *, num_buckets: int,
@@ -209,13 +299,29 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     """q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd).  On TPU: the Pallas
     kernel (scores never leave VMEM); elsewhere: the exact jnp flash."""
     from repro.kernels.flash_attention import flash_attention_pallas
-    from repro.models import attention as attn_lib
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
         interp = (not _on_tpu()) if interpret is None else interpret
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       interpret=interp)
-    b, t = q.shape[:2]
-    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-    return attn_lib.attend(q, k, v, pos, pos, causal=causal, window=window,
-                           flash_threshold=1 << 62)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Oracle registry: every public op names its pure-jnp reference in
+# kernels/ref.py.  CI lints this table (tools/lint_kernel_oracles.py) so
+# the dispatch surface and the oracle set cannot drift — adding an op
+# without a reference is a build failure, not a review nit.
+# ---------------------------------------------------------------------------
+
+ORACLES: dict = {
+    "mach_top1": "mach_decode_ref",
+    "mach_topk": "mach_topk_ref",
+    "mach_scores": "mach_scores_ref",
+    "mach_xent": "mach_xent_ref",
+    "mach_fused_xent": "mach_fused_xent_ref",
+    "mach_fused_xent_csr": "mach_fused_xent_csr_ref",
+    "csr_to_ell": "csr_densify_ref",
+    "lru_scan": "lru_scan_ref",
+    "flash_attention": "flash_attention_ref",
+}

@@ -103,6 +103,56 @@ def mach_fused_xent_ref(h2: jnp.ndarray, w: jnp.ndarray,
     return mach_xent_ref(logits.reshape(n, r, num_buckets), hashed_labels)
 
 
+def csr_densify_ref(indptr: jnp.ndarray, indices: jnp.ndarray,
+                    values: jnp.ndarray, num_features: int) -> jnp.ndarray:
+    """CSR (indptr (N+1,), indices (nnz,), values (nnz,)) -> dense
+    (N, d).  Duplicate indices within a row scatter-ADD, matching the
+    one-hot densification the sparse kernel performs per tile."""
+    n = indptr.shape[0] - 1
+    nnz = indices.shape[0]
+    if nnz == 0:
+        return jnp.zeros((n, num_features), values.dtype)
+    rows = jnp.repeat(jnp.arange(n), jnp.diff(indptr),
+                      total_repeat_length=nnz)
+    return jnp.zeros((n, num_features), values.dtype) \
+        .at[rows, indices].add(values)
+
+
+def mach_fused_xent_csr_ref(indptr: jnp.ndarray, indices: jnp.ndarray,
+                            values: jnp.ndarray, w: jnp.ndarray,
+                            hashed_labels: jnp.ndarray,
+                            num_buckets: int,
+                            bias: jnp.ndarray = None) -> jnp.ndarray:
+    """Dense-densified oracle for the sparse fused projection+CE kernel.
+
+    Exactly the computation the sparse kernel avoids: the CSR batch is
+    scattered into a dense (N, d) activation (in f32 — the kernel's
+    per-tile densification accumulates duplicate ids in f32, so the
+    oracle must too, like ``mach_fused_xent_ref``'s f32 logits), then
+    reduced through the materializing ``mach_fused_xent_ref``.  ``bias``
+    (R·B,) is folded in as an always-on unit feature (matching how
+    callers augment the sparse batch), so d/d(bias) flows through the
+    same path."""
+    x = csr_densify_ref(indptr, indices, values.astype(jnp.float32),
+                        w.shape[0])
+    if bias is not None:
+        x = jnp.concatenate(
+            [x, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
+        w = jnp.concatenate(
+            [w, bias.reshape(1, -1).astype(w.dtype)], axis=0)
+    return mach_fused_xent_ref(x, w, hashed_labels, num_buckets)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window=None):
+    """Materializing attention oracle for ``ops.flash_attention`` — the
+    exact jnp computation (scores in HBM) the Pallas kernel avoids."""
+    from repro.models import attention as attn_lib  # deferred: models import kernels
+    b, t = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    return attn_lib.attend(q, k, v, pos, pos, causal=causal, window=window,
+                           flash_threshold=1 << 62)
+
+
 def mach_xent_grad_ref(logits: jnp.ndarray, hashed_labels: jnp.ndarray,
                        g: jnp.ndarray) -> jnp.ndarray:
     """d loss / d logits = g * (softmax(logits) - onehot(labels)); (N, R, B)."""

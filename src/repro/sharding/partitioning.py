@@ -184,24 +184,35 @@ def state_shardings(mesh: Mesh, rules_cfg: ShardingRules, model, opt,
     # shape required to agree (Adafactor's factored vr/vc share the
     # path but not the shape).  Keying by shape alone would silently
     # give two same-shaped, differently-sharded params the first one's
-    # sharding.  Anything unmatched (step counts, factored moments)
-    # replicates.
+    # sharding.  Parameter paths are indexed by their full component
+    # tuple, so each moment leaf probes its own suffixes longest-first —
+    # O(depth) dict lookups per leaf, O(params + opt_leaves·depth)
+    # total, instead of the old O(params × opt_leaves) scan.  Colliding
+    # suffixes (two params whose paths end identically, e.g. every
+    # layer's "w") live under *different* full-path keys, so only the
+    # exact longest match wins; same-key entries (shouldn't happen for
+    # distinct params) fall back to shape agreement.  Anything unmatched
+    # (step counts, factored moments) replicates.
     p_paths = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
     flat_ps = jax.tree.leaves(p_shard)
-    path2shard = [(jax.tree_util.keystr(path), tuple(leaf.shape), sh)
-                  for (path, leaf), sh in zip(p_paths, flat_ps)]
+    suffix_index: dict = {}
+    for (path, leaf), sh in zip(p_paths, flat_ps):
+        comps = tuple(str(k) for k in path)
+        suffix_index.setdefault(comps, []).append((tuple(leaf.shape), sh))
 
     opt_paths, opt_tdef = jax.tree_util.tree_flatten_with_path(
         state_shapes.opt_state)
 
     def moment_sharding(path, leaf):
-        s = jax.tree_util.keystr(path)
-        best = None
-        for ppath, shape, sh in path2shard:
-            if s.endswith(ppath) and tuple(leaf.shape) == shape:
-                if best is None or len(ppath) > len(best[0]):
-                    best = (ppath, sh)
-        return best[1] if best is not None else rep
+        comps = tuple(str(k) for k in path)
+        shape = tuple(leaf.shape)
+        # longest suffix first; the final probe is the empty path (a
+        # bare-leaf params tree), preserving the old endswith("") case
+        for start in range(len(comps) + 1):
+            for pshape, sh in suffix_index.get(comps[start:], ()):
+                if pshape == shape:
+                    return sh
+        return rep
 
     opt_shard = opt_tdef.unflatten(
         [moment_sharding(path, leaf) for path, leaf in opt_paths])

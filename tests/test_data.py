@@ -63,3 +63,58 @@ def test_extreme_dataset_splits_and_bayes():
     _, y = ds.batch_at(1, 4096)
     counts = np.bincount(np.asarray(y), minlength=64)
     assert counts[:8].sum() > counts[-32:].sum()
+
+
+def test_sparse_dataset_deterministic_and_dense_fallback():
+    from repro.data import SparseExtremeDataConfig, SparseExtremeDataset
+
+    cfg = SparseExtremeDataConfig(num_classes=64, num_features=96, nnz=8,
+                                  sig_features=4, seed=5)
+    ds1, ds2 = SparseExtremeDataset(cfg), SparseExtremeDataset(cfg)
+    sb1, y1 = ds1.batch_at(3, 16)
+    sb2, y2 = ds2.batch_at(3, 16)
+    np.testing.assert_array_equal(np.asarray(sb1.indices),
+                                  np.asarray(sb2.indices))
+    np.testing.assert_array_equal(np.asarray(sb1.values),
+                                  np.asarray(sb2.values))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # CSR invariants: fixed-nnz indptr, in-range ids, normalized rows
+    assert sb1.nnz_max == 8 and sb1.num_features == 96
+    assert sb1.num_rows == 16
+    np.testing.assert_array_equal(np.asarray(sb1.indptr),
+                                  np.arange(17) * 8)
+    assert int(jnp.max(sb1.indices)) < 96
+    # dense fallback is the exact densification of the same batch
+    xd, yd = ds1.batch_at(3, 16, format="dense")
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(y1))
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(sb1.to_dense()),
+                               rtol=0, atol=0)
+    # different steps / splits differ
+    sb3, _ = ds1.batch_at(4, 16)
+    assert not np.array_equal(np.asarray(sb1.indices),
+                              np.asarray(sb3.indices))
+    sbt, _ = ds1.batch_at(3, 16, "test")
+    assert not np.array_equal(np.asarray(sb1.indices),
+                              np.asarray(sbt.indices))
+
+
+def test_sparse_batch_is_jit_transparent():
+    import jax
+
+    from repro.data import SparseBatch
+
+    sb = SparseBatch(indptr=jnp.asarray([0, 2, 3], jnp.int32),
+                     indices=jnp.asarray([1, 3, 0], jnp.int32),
+                     values=jnp.asarray([1.0, 2.0, 3.0]),
+                     num_features=5, nnz_max=2)
+
+    @jax.jit
+    def dense_sum(batch):
+        return jnp.sum(batch.to_dense(), axis=1)
+
+    np.testing.assert_allclose(np.asarray(dense_sum(sb)),
+                               np.array([3.0, 3.0]), rtol=0, atol=0)
+    leaves, treedef = jax.tree.flatten(sb)
+    assert len(leaves) == 3
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.num_features == 5 and rebuilt.nnz_max == 2

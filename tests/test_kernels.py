@@ -250,3 +250,19 @@ def test_flash_attention_dtypes(dtype):
     np.testing.assert_allclose(np.asarray(want, np.float32),
                                np.asarray(got, np.float32),
                                rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ops/oracle drift lint (same check CI runs)
+# ---------------------------------------------------------------------------
+
+def test_every_op_names_a_live_oracle():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tools"))
+    try:
+        from lint_kernel_oracles import check
+    finally:
+        sys.path.pop(0)
+    assert check() == []

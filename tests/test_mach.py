@@ -129,3 +129,23 @@ def test_from_delta_constructor():
     cfg = MACHConfig.from_delta(105033, 32, delta=1e-3)
     assert cfg.indistinguishable_bound() <= 1e-3
     assert cfg.num_repetitions >= 2
+
+
+def test_oaa_loss_all_zero_weights_no_nan():
+    """The maximum(sum, 1.0) guard: an all-padding batch must yield a
+    finite zero loss and finite (zero) grads, not NaN."""
+    oaa = OAAClassifier(16, 8)
+    params = oaa.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, 8))
+    y = jax.random.randint(jax.random.key(2), (4,), 0, 16)
+    zeros = jnp.zeros((4,))
+    loss, g = jax.value_and_grad(oaa.loss)(params, x, y, zeros)
+    assert float(loss) == 0.0
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g))
+    # partial weights still average over the unmasked examples only
+    w2 = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    lw = float(oaa.loss(params, x, y, w2))
+    per = -jnp.take_along_axis(
+        jax.nn.log_softmax(oaa.logits(params, x), axis=-1),
+        y[:, None], axis=-1)[:, 0]
+    np.testing.assert_allclose(lw, float((per[0] + per[2]) / 2), rtol=1e-6)

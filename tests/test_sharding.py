@@ -134,3 +134,52 @@ def test_mach_pod_parallel_rule():
     spec = resolve_spec(MESH2, rules.table(MESH2),
                         ("embed", "mach_rb"), (2048, 16384))
     assert spec == P(None, ("pod", "model"))
+
+
+def test_state_shardings_suffix_index_large_tree_with_collisions():
+    """The O(params) suffix-tuple index: a deep tree where every layer's
+    leaves share terminal path components ('w', 'b') — and a nested
+    'block.w' whose suffix collides with a top-level 'w' of the SAME
+    shape but a different sharding.  Each moment must still inherit its
+    own param's sharding (longest exact suffix wins)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.optim import make_optimizer
+    from repro.sharding import partitioning as part
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    n_layers = 24
+
+    class DeepModel:
+        def init(self, key):
+            p = {"w": jnp.zeros((64, 128)),
+                 "block": {"w": jnp.zeros((64, 128))}}
+            a = {"w": ("embed", "mach_rb"),
+                 "block": {"w": ("vocab", "embed")}}
+            for i in range(n_layers):
+                # alternate axes so neighbouring layers shard differently
+                ax = ("embed", "mlp") if i % 2 else ("heads", "embed")
+                p[f"layer_{i}"] = {"w": jnp.zeros((32, 16)),
+                                   "b": jnp.zeros((16,))}
+                a[f"layer_{i}"] = {"w": ax, "b": (None,)}
+            return p, a
+
+    opt = make_optimizer("adamw", 1e-3)
+    _, shard, _ = part.state_shardings(mesh, ShardingRules(fsdp=True),
+                                       DeepModel(), opt)
+    p = shard.params
+    # the collision: same shape, same terminal component, different spec
+    assert p["w"].spec == P("data", "model")
+    assert p["block"]["w"].spec == P("model", "data")
+    for tree in (shard.opt_state.mu, shard.opt_state.nu):
+        assert tree["w"].spec == p["w"].spec
+        assert tree["block"]["w"].spec == p["block"]["w"].spec
+        for i in range(n_layers):
+            assert tree[f"layer_{i}"]["w"].spec == \
+                p[f"layer_{i}"]["w"].spec
+            assert tree[f"layer_{i}"]["b"].spec == \
+                p[f"layer_{i}"]["b"].spec
+    assert shard.opt_state.count.spec == P()

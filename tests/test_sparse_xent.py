@@ -1,0 +1,277 @@
+"""Sparse (CSR) fused projection+CE: kernel vs densified oracle, the
+MACHHead abstraction, and the structural memory claims.
+
+Parity ladder (all interpret=True on CPU):
+  sparse kernel  ==  ref.mach_fused_xent_csr_ref   (values + dW/dbias)
+  ops.mach_fused_xent_csr / MACHLinear.fused_loss  ==  materializing
+  MACHLinear(fused=True).loss on CSR  ==  MACHLinear().loss on dense
+plus the structural claims the kernel exists for: no (N, R·B) logits
+tensor AND no dense (N, d) activation in the jaxpr of either pass, and
+the slice/merge per-repetition API surviving a fused training step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MACHConfig, MACHHead, MACHLinear, MACHOutputHead
+from repro.core.mach import is_sparse_batch
+from repro.data import SparseBatch, SparseExtremeDataConfig, \
+    SparseExtremeDataset
+from repro.kernels import ops, ref
+from repro.kernels.mach_fused_xent import (choose_sparse_blocks,
+                                           mach_fused_xent_sparse_pallas)
+from repro.optim import adamw, apply_updates
+
+
+def _csr_case(n, d, r, b, nnz_max, seed=0, dtype=jnp.float32):
+    """Shared ragged-CSR fixture (benchmarks/common.py) minus the bias —
+    the benchmark's parity gate and these tests see the same inputs."""
+    from benchmarks.common import make_csr_case
+    indptr, indices, values, w, _, y, g = make_csr_case(
+        n, d, r, b, nnz_max, seed=seed, dtype=dtype)
+    return indptr, indices, values, w, y, g
+
+
+# ---------------------------------------------------------------------------
+# kernel vs densified reference oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,r,b,nnz", [
+    (16, 96, 4, 16, 8),      # several whole heads per column block
+    (13, 100, 6, 24, 5),     # ragged N and d (both padded)
+    (5, 64, 25, 32, 7),      # paper ODP-ish R=25: padded head count
+    (2, 48, 8, 512, 4),      # imagenet-ish B=512, tiny N
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_xent_matches_ref(n, d, r, b, nnz, dtype):
+    indptr, indices, values, w, y, g = _csr_case(n, d, r, b, nnz,
+                                                 dtype=dtype)
+    cols, vals = ops.csr_to_ell(indptr, indices, values, nnz, d)
+    lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y, b)
+    lk = mach_fused_xent_sparse_pallas(cols, vals, w, y, b,
+                                       None, None, None, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-5)
+    dr = jax.grad(lambda w_: jnp.sum(
+        ref.mach_fused_xent_csr_ref(indptr, indices, values, w_, y, b)
+        * g))(w)
+    dk = jax.grad(lambda w_: jnp.sum(
+        mach_fused_xent_sparse_pallas(cols, vals, w_, y, b,
+                                      None, None, None, True) * g))(w)
+    assert dr.dtype == dk.dtype
+    # bf16 grads agree to 1 ulp (the final f32->bf16 cast may round a
+    # near-midpoint value differently between the two paths)
+    rtol, atol = ((1e-2, 1e-4) if dtype == jnp.bfloat16
+                  else (1e-4, 1e-5))
+    np.testing.assert_allclose(np.asarray(dr, np.float32),
+                               np.asarray(dk, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+def test_sparse_xent_d_blocked_and_head_split():
+    """Feature dim larger than the d block AND B larger than the column
+    block: the d-accumulation and the online logsumexp streaming paths
+    run together."""
+    n, d, r, b, nnz = 9, 200, 3, 256, 6
+    indptr, indices, values, w, y, g = _csr_case(n, d, r, b, nnz)
+    bn, bc, bd, rp, bp, jp = choose_sparse_blocks(n, d, r, b, nnz,
+                                                  None, 64, 64)
+    assert bc < b and bd < d                 # the paths under test
+    cols, vals = ops.csr_to_ell(indptr, indices, values, nnz, d)
+    lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y, b)
+    lk = mach_fused_xent_sparse_pallas(cols, vals, w, y, b,
+                                       None, 64, 64, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-5)
+    dr = jax.grad(lambda w_: jnp.sum(
+        ref.mach_fused_xent_csr_ref(indptr, indices, values, w_, y, b)
+        * g))(w)
+    dk = jax.grad(lambda w_: jnp.sum(
+        mach_fused_xent_sparse_pallas(cols, vals, w_, y, b,
+                                      None, 64, 64, True) * g))(w)
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(dk),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_csr_op_with_bias_matches_ref():
+    """ops-level dispatch: bias folded in as a unit feature; dW and
+    dbias both flow through the fused scatter-add."""
+    from benchmarks.common import make_csr_case
+    n, d, r, b, nnz = 11, 96, 5, 32, 8
+    indptr, indices, values, w, bias, y, g = make_csr_case(n, d, r, b,
+                                                           nnz)
+
+    def fr(w_, b_):
+        return jnp.sum(ref.mach_fused_xent_csr_ref(
+            indptr, indices, values, w_, y, b, bias=b_) * g)
+
+    def fk(w_, b_):
+        return jnp.sum(ops.mach_fused_xent_csr(
+            indptr, indices, values, w_, y, num_buckets=b, nnz_max=nnz,
+            bias=b_, use_pallas=True, interpret=True) * g)
+
+    np.testing.assert_allclose(float(fr(w, bias)), float(fk(w, bias)),
+                               rtol=1e-5, atol=1e-5)
+    dr = jax.grad(fr, argnums=(0, 1))(w, bias)
+    dk = jax.grad(fk, argnums=(0, 1))(w, bias)
+    for a, k in zip(dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_csr_to_ell_roundtrip():
+    """ELL layout densifies to exactly the CSR densification (duplicate
+    ids scatter-add; padding contributes nothing)."""
+    n, d, nnz = 7, 40, 5
+    indptr, indices, values, _, _, _ = _csr_case(n, d, 4, 8, nnz)
+    cols, vals = ops.csr_to_ell(indptr, indices, values, nnz, d)
+    assert cols.shape == (n, nnz) and vals.shape == (n, nnz)
+    dense_csr = ref.csr_densify_ref(indptr, indices, values, d)
+    rows = jnp.arange(n)[:, None] * jnp.ones((1, nnz), jnp.int32)
+    dense_ell = jnp.zeros((n, d + 1)).at[
+        rows.reshape(-1), cols.reshape(-1)].add(vals.reshape(-1))[:, :d]
+    np.testing.assert_allclose(np.asarray(dense_csr),
+                               np.asarray(dense_ell), rtol=0, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the MACHHead abstraction: one surface for both heads
+# ---------------------------------------------------------------------------
+
+def test_mach_head_protocol_conformance():
+    cfg = MACHConfig(500, 16, 4)
+    lin = MACHLinear(cfg, 32)
+    out = MACHOutputHead(cfg, 32)
+    assert isinstance(lin, MACHHead) and isinstance(out, MACHHead)
+    key = jax.random.key(0)
+    h = jax.random.normal(jax.random.key(1), (6, 32))
+    y = jax.random.randint(jax.random.key(2), (6,), 0, 500)
+    for head in (lin, out):
+        params = head.init(key)
+        assert float(head.loss(params, h, y)) > 0
+        assert float(head.fused_loss(params, h, y)) == pytest.approx(
+            float(head.loss(params, h, y)), rel=1e-5)
+        pred = head.predict(params, h)          # Algorithm-2 decode
+        assert pred.shape == (6,) and head.param_count() > 0
+
+
+def test_linear_fused_flag_routes_loss_dense():
+    """MACHLinear(fused=True).loss == materializing loss, values and
+    grads (bias included via the unit-feature augmentation)."""
+    cfg = MACHConfig(300, 8, 5)
+    m0, m1 = MACHLinear(cfg, 24), MACHLinear(cfg, 24, fused=True)
+    params = m0.init(jax.random.key(0))
+    params["b"] = jax.random.normal(jax.random.key(3), params["b"].shape) * 0.1
+    x = jax.random.normal(jax.random.key(1), (10, 24))
+    y = jax.random.randint(jax.random.key(2), (10,), 0, 300)
+    l0, g0 = jax.value_and_grad(m0.loss)(params, x, y)
+    l1, g1 = jax.value_and_grad(m1.loss)(params, x, y)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6, atol=1e-6)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_linear_fused_csr_matches_dense_path():
+    """The full vertical slice: SparseBatch -> fused CSR loss ==
+    materializing loss on the densified batch (interpret-mode kernel)."""
+    ds = SparseExtremeDataset(SparseExtremeDataConfig(
+        num_classes=128, num_features=64, nnz=8, sig_features=4))
+    cfg = MACHConfig(128, 8, 4)
+    m0, m1 = MACHLinear(cfg, 64), MACHLinear(cfg, 64, fused=True)
+    params = m0.init(jax.random.key(0))
+    sb, y = ds.batch_at(0, 12)
+    xd, _ = ds.batch_at(0, 12, format="dense")
+    assert is_sparse_batch(sb) and not is_sparse_batch(xd)
+    l0, g0 = jax.value_and_grad(m0.loss)(params, xd, y)
+    l1, g1 = jax.value_and_grad(
+        lambda p: m1.fused_loss(p, sb, y, use_pallas=True,
+                                interpret=True))(params)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5, atol=1e-5)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                   rtol=1e-4, atol=1e-6)
+    # the materializing path accepts the sparse batch too (densifies)
+    np.testing.assert_allclose(float(m0.loss(params, sb, y)), float(l0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_slice_merge_roundtrip_through_fused_step():
+    """Paper §6.1 embarrassing parallelism survives fused training: one
+    adamw step through the fused CSR loss, then slice_repetition /
+    merge_repetitions round-trips the trained params exactly."""
+    ds = SparseExtremeDataset(SparseExtremeDataConfig(
+        num_classes=64, num_features=48, nnz=6, sig_features=3))
+    cfg = MACHConfig(64, 8, 4)
+    m = MACHLinear(cfg, 48, fused=True)
+    params = m.init(jax.random.key(0))
+    sb, y = ds.batch_at(0, 16)
+    opt = adamw(0.05)
+    state = opt.init(params)
+    loss, g = jax.value_and_grad(m.loss)(params, sb, y)
+    upd, state = opt.update(g, state, params)
+    params = apply_updates(params, upd)
+    assert np.isfinite(float(loss))
+    merged = MACHLinear.merge_repetitions(
+        [MACHLinear.slice_repetition(params, j)
+         for j in range(cfg.num_repetitions)])
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# structural claims: no (N, R·B) logits, no dense (N, d) activation
+# ---------------------------------------------------------------------------
+
+def test_no_nrb_or_nd_tensor_in_sparse_jaxpr():
+    from benchmarks.common import intermediate_avals
+
+    n, d, r, b, nnz = 32, 1024, 8, 64, 8
+    indptr, indices, values, w, y, g = _csr_case(n, d, r, b, nnz)
+
+    def fused_vag(w_):
+        return jax.value_and_grad(lambda ww: jnp.sum(
+            ops.mach_fused_xent_csr(indptr, indices, values, ww, y,
+                                    num_buckets=b, nnz_max=nnz,
+                                    use_pallas=True, interpret=True)
+            * g))(w_)
+
+    def densified_vag(w_):
+        return jax.value_and_grad(lambda ww: jnp.sum(
+            ref.mach_fused_xent_csr_ref(indptr, indices, values, ww, y,
+                                        b) * g))(w_)
+
+    nrb, nd = n * r * b, n * d
+
+    def batch_sizes(fn):
+        return [a.size for a in intermediate_avals(
+            jax.make_jaxpr(fn)(w).jaxpr)
+            if getattr(a, "ndim", 0) >= 1 and a.size
+            and n <= a.shape[0] < n + 128]
+
+    fused_sizes = batch_sizes(fused_vag)
+    dens_sizes = batch_sizes(densified_vag)
+    # the densifying path forms the (N, d) activation (and d > R·B here)
+    assert any(s >= nd for s in dens_sizes)
+    # the fused path forms neither the logits nor the dense activation
+    assert all(s < min(nrb, nd) for s in fused_sizes), \
+        sorted(fused_sizes, reverse=True)[:5]
+
+
+def test_csr_to_ell_rejects_undersized_nnz_max():
+    """Rows longer than nnz_max would be silently truncated on the
+    kernel path (the densifying reference uses every entry) — concrete
+    batches must be rejected instead."""
+    indptr = jnp.asarray([0, 3, 4], jnp.int32)   # row 0 has 3 entries
+    indices = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    values = jnp.ones((4,))
+    with pytest.raises(ValueError, match="nnz_max"):
+        ops.csr_to_ell(indptr, indices, values, 2, 8)
+    w = jnp.ones((8, 4 * 2)) * 0.1
+    y = jnp.zeros((2, 2), jnp.int32)
+    with pytest.raises(ValueError, match="nnz_max"):
+        ops.mach_fused_xent_csr(indptr, indices, values, w, y,
+                                num_buckets=4, nnz_max=2,
+                                use_pallas=True, interpret=True)

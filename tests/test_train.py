@@ -196,3 +196,90 @@ def test_stale_tmp_dirs_swept_by_gc():
         mgr.save(2, state, blocking=True)
         assert not os.path.exists(stale)
         assert mgr.latest_step() == 2
+
+
+def test_checkpoint_save_retries_transient_fs_errors(monkeypatch):
+    """Bounded retry with backoff: two transient FS failures, third
+    attempt lands; the checkpoint is durable and wait() is clean."""
+    import numpy as _np
+
+    from repro.checkpoint import manager as manager_mod
+
+    state = {"w": jnp.arange(6.0)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, save_retries=3, retry_backoff=0.0)
+        calls = {"n": 0}
+        orig = _np.savez
+
+        def flaky(*a, **k):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise OSError("transient fs hiccup")
+            return orig(*a, **k)
+
+        monkeypatch.setattr(manager_mod.np, "savez", flaky)
+        mgr.save(7, state, blocking=False)
+        mgr.wait()                               # must not raise
+        assert calls["n"] == 3
+        restored, step = mgr.restore({"w": jnp.zeros(6)})
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(6.0))
+
+
+def test_checkpoint_save_reraises_after_final_attempt(monkeypatch):
+    """A persistent failure exhausts the retry budget and re-raises —
+    async on the next wait(), blocking immediately."""
+    from repro.checkpoint import manager as manager_mod
+
+    state = {"w": jnp.arange(3.0)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, save_retries=2, retry_backoff=0.0)
+        calls = {"n": 0}
+
+        def always_fails(*a, **k):
+            calls["n"] += 1
+            raise OSError("disk on fire")
+
+        monkeypatch.setattr(manager_mod.np, "savez", always_fails)
+        mgr.save(1, state, blocking=False)
+        with pytest.raises(OSError, match="disk on fire"):
+            mgr.wait()
+        assert calls["n"] == 2                   # bounded, not infinite
+        calls["n"] = 0
+        with pytest.raises(OSError, match="disk on fire"):
+            mgr.save(2, state, blocking=True)
+        assert calls["n"] == 2
+        # no half-written checkpoint became visible
+        assert mgr.all_steps() == []
+
+
+def test_checkpoint_publish_failure_never_destroys_durable_step(monkeypatch):
+    """A post-rename failure (LATEST pointer / GC) must not re-enter the
+    step write — the durable step dir survives and restore() recovers
+    it via the directory-scan fallback."""
+    import os as _os
+
+    from repro.checkpoint import manager as manager_mod
+
+    state = {"w": jnp.arange(5.0)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, save_retries=2, retry_backoff=0.0)
+        orig = _os.rename
+
+        def flaky_rename(src, dst):
+            if dst.endswith("LATEST"):
+                raise OSError("LATEST write failed")
+            return orig(src, dst)
+
+        monkeypatch.setattr(manager_mod.os, "rename", flaky_rename)
+        mgr.save(3, state, blocking=False)
+        with pytest.raises(OSError, match="LATEST write failed"):
+            mgr.wait()
+        monkeypatch.setattr(manager_mod.os, "rename", orig)
+        # the step dir is durable despite the publish failure
+        assert mgr.all_steps() == [3]
+        restored, step = mgr.restore({"w": jnp.zeros(5)})
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(5.0))

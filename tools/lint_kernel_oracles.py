@@ -1,0 +1,57 @@
+"""Lint: the kernels/ops.py dispatch surface and the kernels/ref.py
+oracle set must not drift.
+
+Every public op defined in ``repro.kernels.ops`` must name its pure-jnp
+reference in ``ops.ORACLES``, and every named oracle must exist (and be
+callable) in ``repro.kernels.ref``.  An op added without an oracle — or
+an oracle renamed out from under its op — is a build failure, not a
+review nit.  Run by CI and by tests/test_kernels.py:
+
+    PYTHONPATH=src python tools/lint_kernel_oracles.py
+"""
+
+from __future__ import annotations
+
+import inspect
+import sys
+
+
+def check() -> list[str]:
+    from repro.kernels import ops, ref
+
+    errors = []
+    public = sorted(
+        name for name, fn in vars(ops).items()
+        if inspect.isfunction(fn) and not name.startswith("_")
+        and fn.__module__ == ops.__name__)
+    for name in public:
+        if name not in ops.ORACLES:
+            errors.append(
+                f"ops.{name} has no entry in ops.ORACLES — every public "
+                f"op must name its ref.py oracle")
+    for op_name, ref_name in ops.ORACLES.items():
+        if op_name not in public:
+            errors.append(
+                f"ops.ORACLES names {op_name!r}, which is not a public "
+                f"function defined in kernels/ops.py")
+        oracle = getattr(ref, ref_name, None)
+        if not callable(oracle):
+            errors.append(
+                f"oracle ref.{ref_name} (for ops.{op_name}) does not "
+                f"exist in kernels/ref.py or is not callable")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        from repro.kernels import ops
+        print(f"ok: {len(ops.ORACLES)} ops, each naming a live ref.py "
+              f"oracle")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
