@@ -23,9 +23,19 @@ Sweeps (N, d, R, B) — N = B·T flattened tokens — and records, per config:
   * ``has_nrb_tensor_*`` — whether any batch-carrying intermediate of
                   ≥ N·R·B elements exists in the pass.
   * ``parity_max_abs_err`` / ``grad_allclose`` — interpret-mode kernel
-                  vs reference on this config (loss |Δ| and dh/dW at
-                  rtol 1e-4): the PR's acceptance gate, checked on every
-                  sweep entry (``--quick`` skips the largest).
+                  vs reference on this config (loss |Δ| and dh/dW/dbias
+                  at rtol 1e-4): the PR's acceptance gate, checked on
+                  every sweep entry (``--quick`` skips the largest).
+
+The **d-sweep gate** (ISSUE 4): for d ∈ {1k, 4k, 12k} at the
+mistral-large-scale head (R=32, B=512), ``choose_fused_blocks`` must
+yield a tiling whose accounted VMEM tile bytes (``dense_tile_bytes``)
+fit the default 6 MB budget — the old lane-floor clamp silently blew
+it ~2x at d=12288 — and interpret-mode parity (values + dh/dW/dbias)
+must hold through the d-blocked kernels.  ``--quick`` runs the budget
+accounting at every d but parity only at d=1k (interpret-mode grids at
+d=12k are minutes-slow on CPU); the full run checks parity at all
+three.
 
 Writes ``BENCH_xent.json`` (see ``--out``) so the train-loss perf and
 memory trajectory is tracked from this PR forward.
@@ -43,9 +53,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import intermediate_avals, timeit
+from benchmarks.common import intermediate_avals, make_dense_case, timeit
 from repro.kernels import ops, ref
-from repro.kernels.mach_fused_xent import mach_fused_xent_pallas
+from repro.kernels.mach_fused_xent import (DEFAULT_VMEM_BUDGET,
+                                           choose_fused_blocks,
+                                           dense_tile_bytes,
+                                           mach_fused_xent_pallas)
 
 # (N, d, R, B): acceptance config, paper's ODP (R=25, B=32) and
 # ImageNet-21k (R=20, B=512) heads, and a 32k-column ODP-scale head
@@ -60,6 +73,13 @@ SWEEP = [
 ]
 QUICK_SWEEP = SWEEP[:2]
 
+# d-sweep (ISSUE 4): LM-trunk widths at the (R=32, B=512) head.  The
+# chooser is asked at N=256 (the confirmed-blowout shape); parity runs
+# at N=16 — the (C/bc)·(D/bd) grid axes, which the gate exercises, are
+# N-independent, and interpret mode pays per grid step.
+D_SWEEP = [1024, 4096, 12288]
+D_SWEEP_RB = (32, 512)
+
 
 def _memory_model(fn, args, n: int, nrb: int) -> dict:
     """Activation accounting over the traced jaxpr: intermediates whose
@@ -73,29 +93,59 @@ def _memory_model(fn, args, n: int, nrb: int) -> dict:
             "has_nrb_tensor": any(a.size >= nrb for a in acts)}
 
 
-def _make_case(n, d, r, b, seed=0):
-    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed + n), 4)
-    h = jax.random.normal(k1, (n, d)) / np.sqrt(d)
-    w = jax.random.normal(k2, (d, r * b)) / np.sqrt(d)
-    y = jax.random.randint(k3, (n, r), 0, b)
-    g = jax.random.normal(k4, (n,))
-    return h, w, y, g
-
-
-def _verify(h, w, y, g, b) -> tuple[float, bool]:
-    """Interpret-mode kernel vs reference: (max |Δloss|, grads ok)."""
-    lr = ref.mach_fused_xent_ref(h, w, y, b)
-    lk = mach_fused_xent_pallas(h, w, y, b, None, None, True)
+def _verify(h, w, bias, y, g, b, block_c=None, block_d=None
+            ) -> tuple[float, bool]:
+    """Interpret-mode kernel vs reference with the in-kernel bias:
+    (max |Δloss|, dh/dW/dbias grads ok)."""
+    lr = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    lk = mach_fused_xent_pallas(h, w, bias, y, b, None, block_c, block_d,
+                                True)
     loss_err = float(jnp.max(jnp.abs(lr - lk)))
-    dr = jax.grad(lambda h_, w_: jnp.sum(
-        ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
-    dk = jax.grad(lambda h_, w_: jnp.sum(
-        mach_fused_xent_pallas(h_, w_, y, b, None, None, True) * g),
-        argnums=(0, 1))(h, w)
+    dr = jax.grad(lambda h_, w_, b_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b, bias=b_) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    dk = jax.grad(lambda h_, w_, b_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, b_, y, b, None, block_c, block_d,
+                               True) * g),
+        argnums=(0, 1, 2))(h, w, bias)
     grads_ok = all(
         np.allclose(np.asarray(a), np.asarray(k), rtol=1e-4, atol=1e-6)
         for a, k in zip(dr, dk))
     return loss_err, grads_ok
+
+
+def _d_sweep_gate(quick: bool, report=None) -> dict:
+    """ISSUE 4's acceptance gate: budget accounting at every d, parity
+    through the d-blocked kernels (at N=16; the d-blocked grid axes are
+    N-independent)."""
+    r, b = D_SWEEP_RB
+    rows = []
+    for d in D_SWEEP:
+        bn, bc, bd, rp, bp = choose_fused_blocks(256, d, r, b)
+        acct = dense_tile_bytes(bn, bc, bd, rp)
+        row = {"d": d, "R": r, "B": b, "bn": bn, "bc": bc, "bd": bd,
+               "rp": rp, "tile_bytes": acct,
+               "within_budget": bool(acct <= DEFAULT_VMEM_BUDGET)}
+        if not quick or d == D_SWEEP[0]:
+            # parity at the N=256 choice's (bc, bd) — the exact tiling
+            # the budget row is about (bn tracks the smaller N)
+            h, w, bias, y, g = make_dense_case(16, d, r, b)
+            loss_err, grads_ok = _verify(h, w, bias, y, g, b,
+                                         block_c=bc, block_d=bd)
+            row["parity_max_abs_err"] = loss_err
+            row["grad_allclose"] = bool(grads_ok)
+        rows.append(row)
+        if report:
+            report(f"train_xent/d_sweep_d{d}", 0.0,
+                   f"blocks=({bn},{bc},{bd}) tile_kb={acct // 1024} "
+                   f"within_budget={row['within_budget']} "
+                   f"parity={row.get('parity_max_abs_err', 'skipped')} "
+                   f"grads_ok={row.get('grad_allclose', 'skipped')}")
+    ok = all(r_["within_budget"] for r_ in rows) and all(
+        r_.get("grad_allclose", True) and
+        r_.get("parity_max_abs_err", 0.0) <= 1e-4
+        for r_ in rows)
+    return {"rows": rows, "ok": bool(ok)}
 
 
 def bench(quick: bool = False, report=None) -> dict:
@@ -104,31 +154,33 @@ def bench(quick: bool = False, report=None) -> dict:
     rows = []
     sweep = QUICK_SWEEP if quick else SWEEP
     for (n, d, r, b) in sweep:
-        h, w, y, g = _make_case(n, d, r, b)
+        h, w, bias, y, g = make_dense_case(n, d, r, b)
         nrb = n * r * b
 
-        def mat_vag(h_, w_):
-            return jax.value_and_grad(lambda hh, ww: jnp.sum(
-                ref.mach_fused_xent_ref(hh, ww, y, b) * g),
-                argnums=(0, 1))(h_, w_)
+        def mat_vag(h_, w_, bias_):
+            return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+                ref.mach_fused_xent_ref(hh, ww, y, b, bias=bb) * g),
+                argnums=(0, 1, 2))(h_, w_, bias_)
 
-        def fused_vag(h_, w_):
+        def fused_vag(h_, w_, bias_):
             # backend dispatch (kernel on TPU, reference elsewhere)
-            return jax.value_and_grad(lambda hh, ww: jnp.sum(
-                ops.mach_fused_xent(hh, ww, y, num_buckets=b) * g),
-                argnums=(0, 1))(h_, w_)
+            return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+                ops.mach_fused_xent(hh, ww, y, num_buckets=b, bias=bb)
+                * g),
+                argnums=(0, 1, 2))(h_, w_, bias_)
 
-        def kernel_vag(h_, w_):
+        def kernel_vag(h_, w_, bias_):
             # the kernel path regardless of backend (for the jaxpr scan)
-            return jax.value_and_grad(lambda hh, ww: jnp.sum(
-                mach_fused_xent_pallas(hh, ww, y, b, None, None, True) * g),
-                argnums=(0, 1))(h_, w_)
+            return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+                mach_fused_xent_pallas(hh, ww, bb, y, b, None, None,
+                                       None, True) * g),
+                argnums=(0, 1, 2))(h_, w_, bias_)
 
-        us_mat = timeit(jax.jit(mat_vag), h, w, iters=5)
-        us_fused = timeit(jax.jit(fused_vag), h, w, iters=5)
-        mem_mat = _memory_model(mat_vag, (h, w), n, nrb)
-        mem_fused = _memory_model(kernel_vag, (h, w), n, nrb)
-        loss_err, grads_ok = _verify(h, w, y, g, b)
+        us_mat = timeit(jax.jit(mat_vag), h, w, bias, iters=5)
+        us_fused = timeit(jax.jit(fused_vag), h, w, bias, iters=5)
+        mem_mat = _memory_model(mat_vag, (h, w, bias), n, nrb)
+        mem_fused = _memory_model(kernel_vag, (h, w, bias), n, nrb)
+        loss_err, grads_ok = _verify(h, w, bias, y, g, b)
 
         row = {"N": n, "d": d, "R": r, "B": b, "RB": r * b,
                "us_materialized": us_mat, "us_fused": us_fused,
@@ -148,16 +200,20 @@ def bench(quick: bool = False, report=None) -> dict:
                    f"loss_err={loss_err:.1e} grads_ok={grads_ok} "
                    f"kernel={on_tpu}")
 
+    d_sweep = _d_sweep_gate(quick, report)
     verified = all(r["grad_allclose"] and r["parity_max_abs_err"] <= 1e-5
                    for r in rows)
     no_nrb = all(not r["has_nrb_tensor_fused"] for r in rows)
     out = {"backend": backend, "fused_is_kernel": on_tpu,
            "verified_interpret": bool(verified),
            "fused_free_of_nrb_tensor": bool(no_nrb),
+           "d_sweep_ok": d_sweep["ok"],
+           "d_sweep": d_sweep["rows"],
            "configs": rows}
     if report:
         report("train_xent/verified", 0.0,
-               f"interpret_match={verified} no_nrb_tensor={no_nrb}")
+               f"interpret_match={verified} no_nrb_tensor={no_nrb} "
+               f"d_sweep_ok={d_sweep['ok']}")
     return out
 
 
@@ -181,9 +237,11 @@ def main() -> int:
     print(f"wrote {args.out} ({len(result['configs'])} configs, "
           f"backend={result['backend']}, "
           f"verified={result['verified_interpret']}, "
-          f"no_nrb_tensor={result['fused_free_of_nrb_tensor']})")
+          f"no_nrb_tensor={result['fused_free_of_nrb_tensor']}, "
+          f"d_sweep_ok={result['d_sweep_ok']})")
     return 0 if (result["verified_interpret"]
-                 and result["fused_free_of_nrb_tensor"]) else 1
+                 and result["fused_free_of_nrb_tensor"]
+                 and result["d_sweep_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -27,6 +27,22 @@ def intermediate_avals(jaxpr, skip_primitives=("pallas_call",)):
     return out
 
 
+def make_dense_case(n, d, r, b, seed=0, dtype=jnp.float32):
+    """Shared dense fused-xent fixture — the case maker behind the
+    bench parity gate (bench_train_xent) and tests/test_fused_xent.py,
+    so both validate on the same input distribution.
+
+    Returns (h (n, d), w (d, R·B), bias (R·B,), y (n, R), g (n,)):
+    h/w/bias in ``dtype``, labels int32 bucket ids, cotangent g f32."""
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.key(seed + n + r), 5)
+    h = (jax.random.normal(k1, (n, d)) / np.sqrt(d)).astype(dtype)
+    w = (jax.random.normal(k2, (d, r * b)) / np.sqrt(d)).astype(dtype)
+    y = jax.random.randint(k3, (n, r), 0, b)
+    g = jax.random.normal(k4, (n,))
+    bias = (jax.random.normal(k5, (r * b,)) * 0.1).astype(dtype)
+    return h, w, bias, y, g
+
+
 def make_csr_case(n, d, r, b, nnz_max, seed=0, dtype=jnp.float32,
                   ragged=True):
     """Ragged-row CSR batch + MACH head operands — the shared fixture

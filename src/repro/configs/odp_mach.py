@@ -57,11 +57,9 @@ class ExtremeTaskConfig:
 
 # Paper Table 2 run: ODP (B=32, R=25) — 125x model-size reduction.
 # Features are bag-of-words CSR (the paper trains d=422k on one GPU
-# precisely because only ~100 features/doc are active).
-# nnz is kept OFF lane multiples (120, not 128): the fused-CSR op
-# appends one unit feature per row for the bias, and a lane-multiple
-# nnz_max would push the padded ELL width to the next 128 block —
-# doubling the kernel's densify-tile work for one column.
+# precisely because only ~100 features/doc are active).  The bias is a
+# native kernel operand, so the padded ELL width is exactly nnz_max —
+# any value up to a lane multiple (128) costs the same densify tile.
 ODP = ExtremeTaskConfig(
     name="odp", num_classes=105033, dim=422713,
     mach_b=32, mach_r=25,

@@ -154,15 +154,21 @@ class MultShiftFamily:
 import jax  # noqa: E402
 
 
+# the known hash-family kinds — ``MACHConfig`` validates against this
+# at construction so a typo fails fast, not later in make_hash_family
+HASH_KINDS = ("auto", "carter_wegman", "mult_shift")
+
+
 def make_hash_family(num_buckets: int, num_repetitions: int, seed: int = 0,
                      kind: str = "auto"):
     """kind: 'auto' (mult_shift when B=2^k else carter_wegman) |
     'carter_wegman' | 'mult_shift'."""
+    if kind not in HASH_KINDS:
+        raise ValueError(f"unknown hash family kind: {kind!r} "
+                         f"(known: {HASH_KINDS})")
     if kind == "auto":
         kind = ("mult_shift"
                 if num_buckets & (num_buckets - 1) == 0 else "carter_wegman")
     if kind == "mult_shift":
         return MultShiftFamily(num_buckets, num_repetitions, seed)
-    if kind == "carter_wegman":
-        return CarterWegmanFamily(num_buckets, num_repetitions, seed)
-    raise ValueError(f"unknown hash family kind: {kind}")
+    return CarterWegmanFamily(num_buckets, num_repetitions, seed)

@@ -58,6 +58,9 @@ class MACHConfig:
             raise ValueError("R must be >= 1")
         if self.estimator not in est.ESTIMATORS:
             raise ValueError(f"estimator {self.estimator!r} not in {est.ESTIMATORS}")
+        if self.hash_kind not in hashing.HASH_KINDS:
+            raise ValueError(f"hash_kind {self.hash_kind!r} not in "
+                             f"{hashing.HASH_KINDS}")
 
     @property
     def family(self):
@@ -221,10 +224,10 @@ class MACHLinear(MACHHead):
     Inputs may be dense (n, d) arrays or CSR ``SparseBatch``es (the ODP
     bag-of-words regime).  With ``fused=True`` the training ``loss``
     routes through the fused logit-free kernels — dense or CSR entry
-    point by input type, the bias folded in as an always-on unit
-    feature — so the (n, R·B) logits tensor (and for CSR the dense
-    (n, d) activation) never materializes.  The per-repetition
-    slice/merge API (paper §6.1 embarrassing parallelism) is unchanged.
+    point by input type, the bias a native in-kernel operand — so the
+    (n, R·B) logits tensor (and for CSR the dense (n, d) activation)
+    never materializes.  The per-repetition slice/merge API (paper
+    §6.1 embarrassing parallelism) is unchanged.
     """
 
     def __init__(self, cfg: MACHConfig, dim: int, fused: bool = False):
@@ -265,9 +268,11 @@ class MACHLinear(MACHHead):
                    use_pallas: Optional[bool] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
         """Logit-free loss via ``ops.mach_fused_xent`` (dense x) or
-        ``ops.mach_fused_xent_csr`` (SparseBatch x).  The bias enters as
-        an always-on unit feature so its gradient flows through the same
-        fused dW scatter-add."""
+        ``ops.mach_fused_xent_csr`` (SparseBatch x).  The bias is a
+        native kernel operand on both branches — no per-step
+        (d+1, R·B) W-concat on the dense path and no ELL widening on
+        the CSR path; dbias comes from the kernels' (1, bc) scratch
+        reduction."""
         from repro.kernels import ops  # deferred: kernels import core
         c = self.cfg
         hashed = jnp.moveaxis(c.hash_labels(y), 0, -1)       # (n, R)
@@ -279,12 +284,8 @@ class MACHLinear(MACHHead):
                 num_buckets=c.num_buckets, nnz_max=x.nnz_max, bias=bias,
                 use_pallas=use_pallas, interpret=interpret)
         else:
-            ha = jnp.concatenate(
-                [x, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
-            wa = jnp.concatenate(
-                [w2, bias[None].astype(w2.dtype)], axis=0)
             nll = ops.mach_fused_xent(
-                ha, wa, hashed, num_buckets=c.num_buckets,
+                x, w2, hashed, num_buckets=c.num_buckets, bias=bias,
                 use_pallas=use_pallas, interpret=interpret)
         return _weighted_mean(nll, weights)
 

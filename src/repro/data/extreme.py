@@ -130,23 +130,34 @@ class ExtremeDataset:
 class SparseExtremeDataConfig:
     num_classes: int
     num_features: int            # d — the sparse feature space
-    nnz: int = 32                # nonzeros per example (= nnz_max)
+    nnz: int = 32                # max nonzeros per example (= nnz_max)
     sig_features: int = 16       # class-signature features per class
     noise: float = 0.3           # value scale of background features
     seed: int = 0
     zipf_a: float = 1.0          # class-frequency Zipf (0 = uniform)
     feature_zipf_a: float = 1.0  # background-feature popularity Zipf
+    length_zipf_a: float = 0.0   # doc-length Zipf: 0 = every row has
+    #                              exactly nnz entries; > 0 = ragged
+    #                              rows, length in [sig_features, nnz]
+    #                              with P(len = sig + t) ∝ (1+t)^-a
+    #                              (long documents are rare, like real
+    #                              bag-of-words corpora)
 
     def __post_init__(self):
         if not 0 < self.sig_features <= self.nnz:
             raise ValueError("need 0 < sig_features <= nnz")
+        if self.length_zipf_a < 0:
+            raise ValueError("length_zipf_a must be >= 0")
 
 
 class SparseExtremeDataset:
     """Each class owns ``sig_features`` random signature feature ids
-    (value 1); each sample carries them plus ``nnz - sig_features``
-    Zipf-popular background features (value ~ noise·U[0,1]), L2
-    normalized.  Linear in the signature indicators, so MACH logistic
+    (value 1); each sample carries them plus up to ``nnz -
+    sig_features`` Zipf-popular background features (value ~
+    noise·U[0,1]), L2 normalized.  With ``length_zipf_a > 0`` the
+    background count per row is Zipf-distributed (ragged CSR — real
+    bag-of-words doc lengths); otherwise every row has exactly ``nnz``
+    entries.  Linear in the signature indicators, so MACH logistic
     regression is the right model class — and the CSR batch densifies
     to exactly the dense fallback, so the fused-CSR and materializing
     paths train on identical data."""
@@ -194,13 +205,39 @@ class SparseExtremeDataset:
             vals = jnp.concatenate([sig_vals, bg_vals], axis=1)
         else:
             ids, vals = sig_ids, sig_vals
-        vals = vals / jnp.linalg.norm(vals, axis=1, keepdims=True)
-        batch = SparseBatch(
-            indptr=(jnp.arange(batch_size + 1, dtype=jnp.int32) * cfg.nnz),
-            indices=ids.reshape(-1).astype(jnp.int32),
-            values=vals.reshape(-1),
-            num_features=cfg.num_features,
-            nnz_max=cfg.nnz)
+        if cfg.length_zipf_a > 0:
+            # ragged Zipf doc lengths: every row keeps its signature
+            # ids; a Zipf-distributed count of background features
+            # rides along (long documents are rare), so real ragged
+            # rows flow through the fused CSR path — not only
+            # fixed-nnz or handmade fixtures.  Row lengths and CSR
+            # assembly stay pure in (seed, step).
+            kl = jax.random.fold_in(key, 3)
+            t = jnp.arange(n_bg + 1, dtype=jnp.float32)
+            extra = jax.random.categorical(
+                kl, jnp.broadcast_to(-cfg.length_zipf_a * jnp.log1p(t),
+                                     (batch_size, n_bg + 1)))
+            keep = cfg.sig_features + extra                   # (B,)
+            mask = jnp.arange(cfg.nnz)[None, :] < keep[:, None]
+            vals = jnp.where(mask, vals, 0.0)
+            vals = vals / jnp.linalg.norm(vals, axis=1, keepdims=True)
+            mask_np = np.asarray(mask)                # row-major gather
+            batch = SparseBatch(
+                indptr=jnp.asarray(np.concatenate(
+                    [[0], np.cumsum(np.asarray(keep))]), jnp.int32),
+                indices=jnp.asarray(np.asarray(ids)[mask_np], jnp.int32),
+                values=jnp.asarray(np.asarray(vals)[mask_np]),
+                num_features=cfg.num_features,
+                nnz_max=cfg.nnz)
+        else:
+            vals = vals / jnp.linalg.norm(vals, axis=1, keepdims=True)
+            batch = SparseBatch(
+                indptr=(jnp.arange(batch_size + 1, dtype=jnp.int32)
+                        * cfg.nnz),
+                indices=ids.reshape(-1).astype(jnp.int32),
+                values=vals.reshape(-1),
+                num_features=cfg.num_features,
+                nnz_max=cfg.nnz)
         if format == "dense":
             return batch.to_dense(), y.astype(jnp.int32)
         if format != "csr":

@@ -4,15 +4,22 @@
 the trainer still materializes the full (N, R·B) logits tensor in HBM
 via the head matmul, so train-time activation memory is O(N·R·B) and
 the paper's O(d log K) story holds only for parameters.  This kernel
-fuses the hidden→bucket projection into the loss itself:
+fuses the hidden→bucket projection into the loss itself.
 
-    grid (N/bn, C/bc), C = R·B columns, C minor.  Per step the logits
-    tile ``h_blk (bn, d) @ W_blk (d, bc)`` is computed in VMEM and
-    immediately reduced: an online per-head max / sum-exp (flash-
-    attention-style, so heads may span several column blocks) and a
-    gather-free label pick (one-hot contraction against the in-VMEM
-    tile) accumulate into (bn, R) scratch.  The (N, R·B) logits tensor
-    never exists in HBM in either pass.
+Both the dense-h and the sparse-h (padded-ELL) families share one
+d-blocked structure:
+
+    forward grid (N/bn, C/bc, D/bd), C = R·B columns, d minor.  W
+    streams through (bd, bc) VMEM tiles and h through (bn, bd) slices
+    (for sparse h the slice is densified in VMEM from ELL cols/vals via
+    a one-hot contraction); the logits tile accumulates across d blocks
+    in (bn, bc) scratch.  At the last d block the optional bias (1, bc)
+    is broadcast-added and the tile is reduced: an online per-head
+    max / sum-exp (flash-attention-style, so heads may span several
+    column blocks) and a gather-free label pick accumulate into (bn, R)
+    scratch.  Neither the (N, R·B) logits tensor nor a full-d operand
+    tile ever exists — per-step VMEM is O(bn·bd + bd·bc + bn·bc), so
+    LM-scale d (mistral-large d=12288) fits the same budget as d=128.
 
 Column blocks are head-aligned: when B fits the VMEM budget a block
 covers ``nh`` whole heads (no online rescaling ever fires — each head's
@@ -25,40 +32,49 @@ trade) from the saved per-head logsumexp:
 
     dlogits[n, rB+b] = g_n · (softmax(logits)[n, r, b] − 1[b = y_nr])
 
-in a single kernel, grid (C/bc, N/bn) with N minor: ``dW_blk = Σ_i
-h_iᵀ @ dlogits`` accumulates in a (d, bc) scratch (N blocks are
-consecutive, flushed at the last), while ``dh_i += dlogits @ W_blkᵀ``
-accumulates into a *revisited* (bn, d) output block — the dh row block
-is visited once per column block, initialized at the first and
-read-modify-written on each revisit, so the running sum rides the
-output windowing.  Activation residuals are h and the (N, R)
-logsumexp — O(N·d), independent of R·B.
+in a single kernel, grid (C/bc, N/bn, 2·D/bd): per (column, row) cell
+the d axis is swept twice.  Phase 1 (k2 < nkd) rebuilds the logits tile
+once — accumulating activation-slice @ W-tile products across d blocks
+— and at its last step forms dlogits into (bn, bc) scratch, reducing
+dbias into the revisited (1, bc) output row.  Phase 2 (k2 >= nkd)
+revisits the d blocks: ``dW_blk += a_kᵀ @ dlogits`` accumulates through
+the revisited (bd, bc) output window (initialized at the first row
+block, read-modify-written on later revisits) and — dense h only —
+``dh_k += dlogits @ W_kᵀ`` through a revisited (bn, bd) output block
+(initialized at the first column block).  Activation residuals are the
+inputs and the (N, R) logsumexp — O(N·d) dense / O(N·J) sparse,
+independent of R·B.
 
 Sparse features (the paper's ODP d=422k workload): the ``*_sparse``
 entry points take the batch in padded-ELL form — ``cols/vals (N, J)``,
 row n's features at ``cols[n, :]`` with weights ``vals[n, :]`` (padding
 carries val 0) — as produced from CSR by ``ops.mach_fused_xent_csr``.
-A third grid axis blocks the feature dim: per (row block, column block,
-d block) the active slice of the activation is densified *in VMEM* via
-a one-hot contraction (``A[n, p] = Σ_j vals[n, j]·1[cols[n, j] = d0+p]``,
-MXU/Mosaic-friendly, duplicate ids sum like a CSR scatter-add) and
-``A @ W_blk`` accumulates the logits tile across d blocks; the dense
-(N, d) activation never exists in HBM, and W streams through VMEM
-(bd, bc) tiles — full-d rows are never resident, so d=422k heads fit
-the budget.  The backward runs one fused kernel per the dense design:
-for each tile, a first d-sweep recomputes the logits tile once and
-forms dlogits in scratch, then a second d-sweep scatter-adds
-``dW_blk += A_kᵀ @ dlogits`` into a revisited (dp, C) f32 output
-accumulator — only the rows touched by active features receive nonzero
-updates.  ``vals`` is treated as non-differentiable data (zero
-cotangent): features are inputs, not parameters.
+Per d block the active slice of the activation is densified *in VMEM*
+via a one-hot contraction (``A[n, p] = Σ_j vals[n, j]·1[cols[n, j] =
+d0+p]``, MXU/Mosaic-friendly, duplicate ids sum like a CSR scatter-add);
+the dense (N, d) activation never exists in HBM.  ``vals`` is treated
+as non-differentiable data (zero cotangent): features are inputs, not
+parameters.
+
+Block choosing: ``choose_fused_blocks`` / ``choose_sparse_blocks``
+enumerate candidate tilings in preference order (dense: keep bn large
+first — it divides the dominant W stream — then bc, then bd; sparse:
+keep bc large first — each column block pays a full densify d-sweep —
+then bd, shrinking bn before bd as the one-hot tile grows) and return
+the first whose accounted tile bytes (``dense_tile_bytes`` /
+``sparse_tile_bytes`` — the superset of either pass's resident VMEM
+tiles) fit ``vmem_budget``.  A ``ValueError`` is raised only when even
+the minimum tiling (bn=8, bc=128, bd at its floor) overflows; explicit
+``block_*`` overrides pin their dimension and the rest shrink around
+them.
 
 Padding: N pads to bn (padded rows get zero cotangent so contribute
-nothing), heads pad to a multiple of the per-block head count, buckets
-pad to a multiple of the block width; padded columns are masked to
-NEG_INF before the reduction and zeroed in the backward.  Sparse
-operands additionally pad J to a lane multiple and d to a multiple of
-the d block (padded slots carry val 0, padded W rows are zero).
+nothing), d pads to a multiple of bd (zero h columns / zero W rows
+contribute nothing; dh/dW slices drop them), heads pad to a multiple of
+the per-block head count, buckets pad to a multiple of the block width;
+padded columns are masked to NEG_INF before the reduction and zeroed in
+the backward (so dbias's padded columns are zero too).  Sparse operands
+additionally pad J to a lane multiple (padded slots carry val 0).
 
 Interpret-mode caveat (see ROADMAP): the revisited accumulators rely on
 output blocks being re-fetched on non-consecutive revisits.  Every grid
@@ -83,13 +99,14 @@ from repro.kernels.mach_decode import NEG_INF, round_up
 
 _LANE = 128
 
-# Scratch logsumexp state and the revisited dh/dW output accumulators
-# both require grid steps to run in order — declare every grid axis
-# "arbitrary" (sequential) so Mosaic may not parallelize/reorder them.
-_SEQUENTIAL2 = pltpu.TPUCompilerParams(
-    dimension_semantics=("arbitrary", "arbitrary"))
+# Scratch logsumexp state and the revisited dh/dW/dbias output
+# accumulators all require grid steps to run in order — declare every
+# grid axis "arbitrary" (sequential) so Mosaic may not parallelize or
+# reorder them.
 _SEQUENTIAL3 = pltpu.TPUCompilerParams(
     dimension_semantics=("arbitrary", "arbitrary", "arbitrary"))
+
+DEFAULT_VMEM_BUDGET = 6 * 2**20
 
 
 def _align_columns(bc_cap: int, r: int, b: int) -> tuple[int, int, int]:
@@ -102,81 +119,156 @@ def _align_columns(bc_cap: int, r: int, b: int) -> tuple[int, int, int]:
     return bc_cap, r, round_up(b, bc_cap)
 
 
+def dense_tile_bytes(bn: int, bc: int, bd: int, rp: int) -> int:
+    """Accounted VMEM bytes of the dense kernels' resident tiles (f32),
+    the max over the forward and backward pass:
+
+    fwd:  h (bn,bd) + W (bd,bc) + bias (1,bc) + y (bn,rp) + loss (bn,1)
+          + lse (bn,rp) + acc scratch (bn,bc) + 3 stats (bn,rp)
+    bwd:  h + W + bias + y + lse + g (bn,1) + dh (bn,bd) + dW (bd,bc)
+          + dbias (1,bc) + acc/dlog scratch 2·(bn,bc)
+    """
+    fwd = bn * bd + bd * bc + bc + 5 * bn * rp + bn + bn * bc
+    bwd = 2 * bn * bd + 2 * bd * bc + 2 * bc + 2 * bn * rp + 2 * bn \
+        + 2 * bn * bc
+    return 4 * max(fwd, bwd)
+
+
+def sparse_tile_bytes(bn: int, bc: int, bd: int, rp: int, jp: int) -> int:
+    """Accounted VMEM bytes of the sparse kernels' resident tiles (f32).
+    The per-step densify holds ~two (bn, jp, bd) one-hot intermediates
+    on top of the ELL tiles; otherwise as ``dense_tile_bytes`` minus the
+    dense dh output."""
+    densify = 2 * bn * jp * bd + 2 * bn * jp
+    fwd = densify + bd * bc + bc + 5 * bn * rp + bn + bn * bc
+    bwd = densify + 2 * bd * bc + 2 * bc + 2 * bn * rp + 2 * bn \
+        + 2 * bn * bc
+    return 4 * max(fwd, bwd)
+
+
+def _candidates(override: Optional[int], pool: tuple[int, ...], pref: int,
+                granule: int) -> list[int]:
+    """Descending candidate sizes: the pinned override alone, or pref
+    followed by every smaller pool entry."""
+    if override is not None:
+        return [max(granule, round_up(override, granule))]
+    return [pref] + [x for x in pool if x < pref]
+
+
 def choose_fused_blocks(n: int, d: int, r: int, b: int,
                         block_n: Optional[int] = None,
                         block_c: Optional[int] = None,
-                        vmem_budget: int = 6 * 2**20
-                        ) -> tuple[int, int, int, int]:
-    """Pick (bn, bc, rp, bp): N block, column block, padded head count,
-    padded bucket count.  Budget covers the W tile, the logits tile and
-    the backward accumulators, all f32."""
-    bn = block_n or min(128, max(8, n))
-    bn = max(8, round_up(bn, 8))
-    if block_c is not None:
-        bc_cap = max(1, block_c)
-    else:
-        bc_cap = vmem_budget // (4 * (2 * d + 2 * bn))
-        bc_cap = int(min(max(bc_cap // _LANE * _LANE, _LANE), 2048))
-    bc, rp, bp = _align_columns(bc_cap, r, b)
-    return bn, bc, rp, bp
+                        block_d: Optional[int] = None,
+                        vmem_budget: int = DEFAULT_VMEM_BUDGET
+                        ) -> tuple[int, int, int, int, int]:
+    """Pick (bn, bc, bd, rp, bp): N block, column block, d block, padded
+    head count, padded bucket count — the first candidate tiling whose
+    ``dense_tile_bytes`` fit ``vmem_budget``.
+
+    Preference order (first kept large): bn — the W stream is read
+    N/bn times, the dominant HBM traffic at LM-scale d; then bc — h is
+    re-fetched C/bc times; then bd, which only sets the pipelining
+    granularity.  Default bd/bc are lane multiples (each is some tile's
+    minor dim); d pads up to a bd multiple.  Explicit ``block_*``
+    overrides are honored at sublane (8) granularity — sub-lane minor
+    blocks are a test/bench knob for exercising the streaming paths on
+    small shapes in interpret mode; pin lane multiples on real TPU
+    (Mosaic requires minor block dims of 128·k or the full array dim).
+    Raises ``ValueError`` when even the minimum tiling overflows the
+    budget."""
+    bn_cands = _candidates(block_n, (64, 32, 16, 8),
+                           min(128, max(8, round_up(n, 8))), 8)
+    bd_full = min(512, round_up(max(d, 1), _LANE))
+    bd_cands = _candidates(block_d, (384, 256, 128), bd_full, 8)
+    bc_caps = ([max(1, block_c)] if block_c is not None
+               else [2048, 1024, 512, 256, 128])
+    for bn in bn_cands:
+        for bc_cap in bc_caps:
+            bc, rp, bp = _align_columns(bc_cap, r, b)
+            for bd in bd_cands:
+                if dense_tile_bytes(bn, bc, bd, rp) <= vmem_budget:
+                    return bn, bc, bd, rp, bp
+    bc_min, rp_min, _ = _align_columns(bc_caps[-1], r, b)
+    raise ValueError(
+        f"no dense fused-xent tiling fits vmem_budget={vmem_budget}: "
+        f"minimum candidate (bn={bn_cands[-1]}, bc={bc_min}, "
+        f"bd={bd_cands[-1]}) needs "
+        f"{dense_tile_bytes(bn_cands[-1], bc_min, bd_cands[-1], rp_min)} "
+        f"bytes (n={n}, d={d}, r={r}, b={b})")
 
 
 def choose_sparse_blocks(n: int, d: int, r: int, b: int, j: int,
                          block_n: Optional[int] = None,
                          block_c: Optional[int] = None,
                          block_d: Optional[int] = None,
-                         vmem_budget: int = 6 * 2**20
+                         vmem_budget: int = DEFAULT_VMEM_BUDGET
                          ) -> tuple[int, int, int, int, int, int]:
-    """Pick (bn, bc, bd, rp, bp, jp) for the sparse kernels.  The
-    densified (bn, jp, bd) one-hot tile is the VMEM driver: bn shrinks
-    first as jp (the padded nnz) grows, then bd drops below a full lane
-    block (to the 8-sublane floor) so the tile stays under half the
-    budget even at bag-of-words nnz (~1k)."""
+    """Pick (bn, bc, bd, rp, bp, jp) for the sparse kernels — the first
+    candidate tiling whose ``sparse_tile_bytes`` fit ``vmem_budget``.
+
+    The densified (bn, jp, bd) one-hot tile is the VMEM driver.
+    Preference order: bc first (every column block pays a full densify
+    d-sweep, so fewer blocks = less recompute); then bd, with bn
+    shrinking before bd drops (bn is capped at 16 anyway — sublane
+    granularity, not W traffic, is the constraint); bd may fall below a
+    lane block to the 8-sublane floor at bag-of-words nnz (bd is only
+    ever a sublane dim here — the W tile's minor dim is bc).  A
+    sub-lane ``block_c`` override is an interpret-mode test knob, as in
+    ``choose_fused_blocks``.  Raises ``ValueError`` when even the
+    minimum tiling overflows."""
     jp = round_up(max(j, 1), _LANE)
-    # the densify body holds ~two f32 (bn, jp, bd) intermediates, so
-    # size them to half the budget together: 2·4·bn·jp·bd <= budget/2
-    if block_n is not None:
-        bn = max(8, round_up(block_n, 8))
-    else:
-        bn_cap = vmem_budget // (4 * 4 * jp * _LANE)   # bd >= one lane
-        bn = min(16, max(8, n), max(8, bn_cap // 8 * 8))
-    if block_d is not None:
-        bd = max(8, round_up(block_d, 8))
-    else:
-        bd = vmem_budget // (4 * 4 * bn * jp)
-        if bd >= _LANE:
-            bd = int(min(bd // _LANE * _LANE, 512))
-        else:
-            # one-hot tile can't afford a full lane block: sublane floor
-            bd = int(max(bd // 8 * 8, 8))
-    if block_c is not None:
-        bc_cap = max(1, block_c)
-    else:
-        bc_cap = vmem_budget // (4 * (bd + 4 * bn))
-        bc_cap = int(min(max(bc_cap // _LANE * _LANE, _LANE), 2048))
-    bc, rp, bp = _align_columns(bc_cap, r, b)
-    return bn, bc, bd, rp, bp, jp
+    bn_cands = _candidates(block_n, (8,),
+                           min(16, max(8, round_up(n, 8))), 8)
+    bd_full = min(512, round_up(max(d, 1), 8))
+    bd_cands = _candidates(block_d, (256, 128, 64, 32, 16, 8), bd_full, 8)
+    bc_caps = ([max(1, block_c)] if block_c is not None
+               else [2048, 1024, 512, 256, 128])
+    for bc_cap in bc_caps:
+        bc, rp, bp = _align_columns(bc_cap, r, b)
+        for bd in bd_cands:
+            for bn in bn_cands:
+                if sparse_tile_bytes(bn, bc, bd, rp, jp) <= vmem_budget:
+                    return bn, bc, bd, rp, bp, jp
+    raise ValueError(
+        f"no sparse fused-xent tiling fits vmem_budget={vmem_budget} "
+        f"(n={n}, d={d}, r={r}, b={b}, nnz_max={j} -> jp={jp})")
 
 
-def _pad_operands(h2, w, labels, r, b, bn, rp, bp):
-    """(h (N,d), w (d,R·B), y (N,R)) -> padded (h (Np,d), w (d,rp·bp),
-    y (Np,rp) int32).  W pads with zero heads/buckets (masked in-kernel),
+def _pad_bias(bias, r, b, rp, bp):
+    """bias (R·B,) or None -> (1, rp·bp) f32 (zeros when absent — the
+    kernels take the operand unconditionally; the add is free)."""
+    if bias is None:
+        return jnp.zeros((1, rp * bp), jnp.float32)
+    b2 = jnp.pad(bias.astype(jnp.float32).reshape(r, b),
+                 ((0, rp - r), (0, bp - b)))
+    return b2.reshape(1, rp * bp)
+
+
+def _pad_operands(h2, w, bias, labels, r, b, bn, rp, bp, bd):
+    """(h (N,d), w (d,R·B), bias (R·B,)|None, y (N,R)) -> padded
+    (h (Np,dp), w (dp,rp·bp), bias (1,rp·bp), y (Np,rp) int32, dp).
+    W pads with zero heads/buckets/rows (masked or inert in-kernel),
     labels pad with bucket 0 (their heads are masked)."""
     n, d = h2.shape
+    dp = round_up(d, bd)
     npad = -n % bn
+    if npad or dp != d:
+        h2 = jnp.pad(h2, ((0, npad), (0, dp - d)))
     if npad:
-        h2 = jnp.pad(h2, ((0, npad), (0, 0)))
         labels = jnp.pad(labels, ((0, npad), (0, 0)))
     labels = jnp.pad(labels.astype(jnp.int32), ((0, 0), (0, rp - r)))
     w3 = w.reshape(d, r, b)
-    w3 = jnp.pad(w3, ((0, 0), (0, rp - r), (0, bp - b)))
-    return h2, w3.reshape(d, rp * bp), labels
+    w3 = jnp.pad(w3, ((0, dp - d), (0, rp - r), (0, bp - b)))
+    return h2, w3.reshape(dp, rp * bp), _pad_bias(bias, r, b, rp, bp), \
+        labels, dp
 
 
-def _pad_sparse_operands(cols, vals, w, labels, r, b, bn, rp, bp, bd, jp):
-    """ELL (cols/vals (N,J)), w (d,R·B), y (N,R) -> padded (cols/vals
-    (Np,jp), w (dp,rp·bp), y (Np,rp), dp).  Padded slots carry val 0 so
-    they contribute nothing regardless of their col id."""
+def _pad_sparse_operands(cols, vals, w, bias, labels, r, b, bn, rp, bp,
+                         bd, jp):
+    """ELL (cols/vals (N,J)), w (d,R·B), bias, y (N,R) -> padded
+    (cols/vals (Np,jp), w (dp,rp·bp), bias (1,rp·bp), y (Np,rp), dp).
+    Padded slots carry val 0 so they contribute nothing regardless of
+    their col id."""
     n, j = cols.shape
     d = w.shape[0]
     dp = round_up(d, bd)
@@ -187,7 +279,8 @@ def _pad_sparse_operands(cols, vals, w, labels, r, b, bn, rp, bp, bd, jp):
     labels = jnp.pad(labels, ((0, 0), (0, rp - r)))
     w3 = w.reshape(d, r, b)
     w3 = jnp.pad(w3, ((0, dp - d), (0, rp - r), (0, bp - b)))
-    return cols, vals, w3.reshape(dp, rp * bp), labels, dp
+    return cols, vals, w3.reshape(dp, rp * bp), \
+        _pad_bias(bias, r, b, rp, bp), labels, dp
 
 
 def _tile_geometry(bc, bp, kblk):
@@ -210,11 +303,11 @@ def _mask_tile3(tile, bn, nh, width, boff, b):
     return jnp.where(bidx < b, tile3, NEG_INF), bidx
 
 
-def _masked_tile(h_ref, w_ref, bn, nh, width, boff, b):
-    """Dense logits tile (bn, nh, width) in f32 via h @ W."""
-    tile = jnp.dot(h_ref[...].astype(jnp.float32),
-                   w_ref[...].astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
+def _finalize_tile(acc, bias_ref, bn, nh, width, boff, b):
+    """d-accumulated logits tile + broadcast bias row -> masked (bn,
+    nh, width) tile and bucket ids (the bias lands once, at the last d
+    block, where this is called)."""
+    tile = acc + bias_ref[...].astype(jnp.float32)      # (bn,bc)+(1,bc)
     return _mask_tile3(tile, bn, nh, width, boff, b)
 
 
@@ -275,95 +368,18 @@ def _dlogits_from_tile(tile3, bidx, y_ref, lse_ref, g_ref, r, b, h0, nh,
 
 
 # ---------------------------------------------------------------------------
-# Dense-h kernel bodies
+# Shared d-blocked kernel steps (dense and sparse differ only in how
+# the (bn, bd) activation slice ``a`` is produced: a block load vs an
+# in-VMEM ELL densification).
 # ---------------------------------------------------------------------------
 
-def _fwd_body(bn, bc, r, rp, b, bp,
-              h_ref, w_ref, y_ref, loss_ref, lse_ref,
-              m_scr, s_scr, p_scr):
-    """Forward step: online per-head (max, sumexp, picked) accumulation.
-    h_ref (bn, d); w_ref (d, bc); y_ref (bn, rp); scratch (bn, rp)."""
-    kblk = pl.program_id(1)
-    nkb = pl.num_programs(1)
-    nh, width, h0, boff = _tile_geometry(bc, bp, kblk)
-
-    @pl.when(kblk == 0)
-    def _init():
-        m_scr[...] = jnp.full((bn, rp), NEG_INF, jnp.float32)
-        s_scr[...] = jnp.zeros((bn, rp), jnp.float32)
-        p_scr[...] = jnp.zeros((bn, rp), jnp.float32)
-
-    tile3, bidx = _masked_tile(h_ref, w_ref, bn, nh, width, boff, b)
-    _online_update(tile3, bidx, y_ref, m_scr, s_scr, p_scr, h0, nh)
-
-    @pl.when(kblk == nkb - 1)
-    def _flush():
-        _flush_stats(r, loss_ref, lse_ref, m_scr, s_scr, p_scr)
-
-
-def _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
-                  bn, bc, r, b, bp, kblk):
-    """Recompute the dense logits tile and form g·(softmax − onehot)."""
-    nh, width, h0, boff = _tile_geometry(bc, bp, kblk)
-    tile3, bidx = _masked_tile(h_ref, w_ref, bn, nh, width, boff, b)
-    return _dlogits_from_tile(tile3, bidx, y_ref, lse_ref, g_ref, r, b,
-                              h0, nh, width)
-
-
-def _bwd_body(bn, bc, d, r, rp, b, bp,
-              h_ref, w_ref, y_ref, lse_ref, g_ref,
-              dh_ref, dw_ref, dw_acc):
-    """Single-recompute backward;  grid (C/bc, N/bn), N minor.
-
-    Per step the dlogits tile is formed ONCE and feeds both grads:
-    dW_blk = Σ_i h_iᵀ @ dlogits accumulates in (d, bc) scratch (the N
-    blocks are consecutive, flushed at the last); dh_i += dlogits @
-    W_blkᵀ accumulates through the revisited (bn, d) output block —
-    initialized at the first column block, read-modify-written on each
-    revisit (f32; cast to h's dtype happens outside)."""
-    kblk = pl.program_id(0)
-    iblk = pl.program_id(1)
-    nib = pl.num_programs(1)
-
-    @pl.when(iblk == 0)
-    def _init():
-        dw_acc[...] = jnp.zeros((d, bc), jnp.float32)
-
-    dtile = _dlogits_tile(h_ref, w_ref, y_ref, lse_ref, g_ref,
-                          bn, bc, r, b, bp, kblk)
-    dw_acc[...] += jax.lax.dot_general(
-        h_ref[...].astype(jnp.float32), dtile,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)                   # (d, bc)
-    dh_contrib = jax.lax.dot_general(
-        dtile, w_ref[...].astype(jnp.float32),
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)                   # (bn, d)
-
-    @pl.when(kblk == 0)
-    def _dh_first():
-        dh_ref[...] = dh_contrib
-
-    @pl.when(kblk > 0)
-    def _dh_acc():
-        dh_ref[...] += dh_contrib
-
-    @pl.when(iblk == nib - 1)
-    def _flush():
-        dw_ref[...] = dw_acc[...].astype(dw_ref.dtype)
-
-
-# ---------------------------------------------------------------------------
-# Sparse-h (padded-ELL) kernel bodies
-# ---------------------------------------------------------------------------
-
-def _sparse_fwd_body(bn, bc, bd, r, rp, b, bp, jp,
-                     cols_ref, vals_ref, w_ref, y_ref, loss_ref, lse_ref,
-                     acc_scr, m_scr, s_scr, p_scr):
-    """Forward;  grid (N/bn, C/bc, D/bd), d minor.  The logits tile
-    accumulates over d blocks in (bn, bc) scratch from in-VMEM densified
-    activation slices; the online reduction fires once per column block
-    at the last d block."""
+def _dblocked_fwd_step(a, bn, bc, r, rp, b, bp,
+                       w_ref, bias_ref, y_ref, loss_ref, lse_ref,
+                       acc_scr, m_scr, s_scr, p_scr):
+    """Forward step;  grid (N/bn, C/bc, D/bd), d minor.  The logits
+    tile accumulates over d blocks in (bn, bc) scratch; the bias add
+    and the online reduction fire once per column block at the last d
+    block."""
     jblk = pl.program_id(1)
     kd = pl.program_id(2)
     njb = pl.num_programs(1)
@@ -379,14 +395,14 @@ def _sparse_fwd_body(bn, bc, bd, r, rp, b, bp, jp,
     def _init_acc():
         acc_scr[...] = jnp.zeros((bn, bc), jnp.float32)
 
-    a = _densify_tile(cols_ref, vals_ref, kd * bd, bn, jp, bd)
     acc_scr[...] += jnp.dot(a, w_ref[...].astype(jnp.float32),
                             preferred_element_type=jnp.float32)
 
     @pl.when(kd == nkd - 1)
     def _reduce():
         nh, width, h0, boff = _tile_geometry(bc, bp, jblk)
-        tile3, bidx = _mask_tile3(acc_scr[...], bn, nh, width, boff, b)
+        tile3, bidx = _finalize_tile(acc_scr[...], bias_ref, bn, nh,
+                                     width, boff, b)
         _online_update(tile3, bidx, y_ref, m_scr, s_scr, p_scr, h0, nh)
 
         @pl.when(jblk == njb - 1)
@@ -394,19 +410,22 @@ def _sparse_fwd_body(bn, bc, bd, r, rp, b, bp, jp,
             _flush_stats(r, loss_ref, lse_ref, m_scr, s_scr, p_scr)
 
 
-def _sparse_bwd_body(bn, bc, bd, nkd, r, rp, b, bp, jp,
-                     cols_ref, vals_ref, w_ref, y_ref, lse_ref,
-                     g_ref, dw_ref, acc_scr, dlog_scr):
-    """Single-recompute backward;  grid (C/bc, N/bn, 2·D/bd).
+def _dblocked_bwd_step(a, nkd, bn, bc, r, rp, b, bp,
+                       w_ref, bias_ref, y_ref, lse_ref, g_ref,
+                       dw_ref, db_ref, acc_scr, dlog_scr, dh_ref=None):
+    """Single-recompute backward step;  grid (C/bc, N/bn, 2·D/bd).
 
-    Per (column block, row block) the d axis is swept twice: phase 1
-    (k2 < nkd) rebuilds the logits tile once and forms dlogits into
-    scratch at its last step; phase 2 scatter-adds dW_blk += A_kᵀ @
-    dlogits through the revisited output block — initialized at the
-    first row block, read-modify-written on later revisits (phase-1
-    steps map the same block but leave it untouched).  Only W rows hit
-    by active features receive nonzero updates — a sparse scatter-add
-    at (bd, bc) granularity."""
+    ``a`` is the activation slice for d block ``k2 mod nkd`` (the
+    callers' index maps / densify offsets already fold the two-phase
+    k2 -> d-block mapping).  Phase 1 (k2 < nkd) rebuilds the logits
+    tile once, then at its last step forms dlogits into scratch and
+    reduces dbias into the revisited (1, bc) output row; phase 2
+    scatter-adds dW_blk += aᵀ @ dlogits through the revisited (bd, bc)
+    output window (initialized at the first row block,
+    read-modify-written on later revisits — phase-1 steps map the same
+    block but leave it untouched) and, when ``dh_ref`` is given (dense
+    h), dh_blk += dlogits @ Wᵀ through the revisited (bn, bd) output
+    block (initialized at the first column block)."""
     jblk = pl.program_id(0)
     iblk = pl.program_id(1)
     k2 = pl.program_id(2)
@@ -417,130 +436,226 @@ def _sparse_bwd_body(bn, bc, bd, nkd, r, rp, b, bp, jp,
         def _init():
             acc_scr[...] = jnp.zeros((bn, bc), jnp.float32)
 
-        a = _densify_tile(cols_ref, vals_ref, k2 * bd, bn, jp, bd)
         acc_scr[...] += jnp.dot(a, w_ref[...].astype(jnp.float32),
                                 preferred_element_type=jnp.float32)
 
         @pl.when(k2 == nkd - 1)
         def _dlog():
             nh, width, h0, boff = _tile_geometry(bc, bp, jblk)
-            tile3, bidx = _mask_tile3(acc_scr[...], bn, nh, width, boff, b)
+            tile3, bidx = _finalize_tile(acc_scr[...], bias_ref, bn, nh,
+                                         width, boff, b)
             dlog_scr[...] = _dlogits_from_tile(
                 tile3, bidx, y_ref, lse_ref, g_ref, r, b, h0, nh, width)
+            db_contrib = jnp.sum(dlog_scr[...], axis=0, keepdims=True)
+
+            @pl.when(iblk == 0)
+            def _db_first():
+                db_ref[...] = db_contrib
+
+            @pl.when(iblk > 0)
+            def _db_acc():
+                db_ref[...] += db_contrib
 
     @pl.when(k2 >= nkd)
-    def _dw_phase():
-        a = _densify_tile(cols_ref, vals_ref, (k2 - nkd) * bd, bn, jp, bd)
-        contrib = jax.lax.dot_general(
-            a, dlog_scr[...],
+    def _grad_phase():
+        dlog = dlog_scr[...]
+        dw_contrib = jax.lax.dot_general(
+            a, dlog,
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)               # (bd, bc)
 
         @pl.when(iblk == 0)
         def _dw_first():
-            dw_ref[...] = contrib
+            dw_ref[...] = dw_contrib
 
         @pl.when(iblk > 0)
         def _dw_acc():
-            dw_ref[...] += contrib
+            dw_ref[...] += dw_contrib
+
+        if dh_ref is not None:
+            dh_contrib = jax.lax.dot_general(
+                dlog, w_ref[...].astype(jnp.float32),
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)           # (bn, bd)
+
+            @pl.when(jblk == 0)
+            def _dh_first():
+                dh_ref[...] = dh_contrib
+
+            @pl.when(jblk > 0)
+            def _dh_acc():
+                dh_ref[...] += dh_contrib
+
+
+# ---------------------------------------------------------------------------
+# Dense-h kernel bodies
+# ---------------------------------------------------------------------------
+
+def _fwd_body(bn, bc, r, rp, b, bp,
+              h_ref, w_ref, bias_ref, y_ref, loss_ref, lse_ref,
+              acc_scr, m_scr, s_scr, p_scr):
+    """h_ref (bn, bd); w_ref (bd, bc); bias_ref (1, bc); y_ref (bn, rp);
+    scratch acc (bn, bc) + stats (bn, rp)."""
+    _dblocked_fwd_step(h_ref[...].astype(jnp.float32), bn, bc, r, rp, b,
+                       bp, w_ref, bias_ref, y_ref, loss_ref, lse_ref,
+                       acc_scr, m_scr, s_scr, p_scr)
+
+
+def _bwd_body(bn, bc, nkd, r, rp, b, bp,
+              h_ref, w_ref, bias_ref, y_ref, lse_ref, g_ref,
+              dh_ref, dw_ref, db_ref, acc_scr, dlog_scr):
+    """The h/W/dh/dW index maps fold k2 -> k2 mod nkd, so ``h_ref`` is
+    the right (bn, bd) slice in both phases."""
+    _dblocked_bwd_step(h_ref[...].astype(jnp.float32), nkd, bn, bc, r,
+                       rp, b, bp, w_ref, bias_ref, y_ref, lse_ref, g_ref,
+                       dw_ref, db_ref, acc_scr, dlog_scr, dh_ref=dh_ref)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-h (padded-ELL) kernel bodies
+# ---------------------------------------------------------------------------
+
+def _sparse_fwd_body(bn, bc, bd, r, rp, b, bp, jp,
+                     cols_ref, vals_ref, w_ref, bias_ref, y_ref,
+                     loss_ref, lse_ref, acc_scr, m_scr, s_scr, p_scr):
+    a = _densify_tile(cols_ref, vals_ref, pl.program_id(2) * bd, bn, jp,
+                      bd)
+    _dblocked_fwd_step(a, bn, bc, r, rp, b, bp, w_ref, bias_ref, y_ref,
+                       loss_ref, lse_ref, acc_scr, m_scr, s_scr, p_scr)
+
+
+def _sparse_bwd_body(bn, bc, bd, nkd, r, rp, b, bp, jp,
+                     cols_ref, vals_ref, w_ref, bias_ref, y_ref, lse_ref,
+                     g_ref, dw_ref, db_ref, acc_scr, dlog_scr):
+    """No dh: ``vals`` is data (zero cotangent).  The densify offset
+    folds the two-phase k2 -> d-block mapping itself."""
+    k2 = pl.program_id(2)
+    kd = jnp.where(k2 >= nkd, k2 - nkd, k2)
+    a = _densify_tile(cols_ref, vals_ref, kd * bd, bn, jp, bd)
+    _dblocked_bwd_step(a, nkd, bn, bc, r, rp, b, bp, w_ref, bias_ref,
+                       y_ref, lse_ref, g_ref, dw_ref, db_ref, acc_scr,
+                       dlog_scr)
 
 
 # ---------------------------------------------------------------------------
 # Dense-h entry point
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
 def mach_fused_xent_pallas(h2: jnp.ndarray, w: jnp.ndarray,
+                           bias: Optional[jnp.ndarray],
                            hashed_labels: jnp.ndarray,
                            num_buckets: int,
                            block_n: Optional[int] = None,
                            block_c: Optional[int] = None,
+                           block_d: Optional[int] = None,
                            interpret: bool = False) -> jnp.ndarray:
     """Per-example summed R-head CE, straight from hidden states.
 
-    h2 (N, d); w (d, R·B); hashed_labels (N, R) int32 -> (N,) f32.
-    Differentiable: the VJP yields (dh, dW) without ever forming the
-    (N, R·B) logits tensor."""
-    out, _ = _fused_fwd(h2, w, hashed_labels, num_buckets, block_n,
-                        block_c, interpret)
+    h2 (N, d); w (d, R·B); bias (R·B,) or None (broadcast-added to the
+    logits tile in-kernel); hashed_labels (N, R) int32 -> (N,) f32.
+    Differentiable: the VJP yields (dh, dW, dbias) without ever forming
+    the (N, R·B) logits tensor or a full-d operand tile."""
+    out, _ = _fused_fwd(h2, w, bias, hashed_labels, num_buckets, block_n,
+                        block_c, block_d, interpret)
     return out
 
 
-def _fused_call(kind, h2p, wp, yp, lsep, gp, dims, bn, bc, interpret):
+def _fused_call(kind, h2p, wp, biasp, yp, lsep, gp, dims, bn, bc, bd,
+                interpret):
     """Shared pallas_call builder for the dense forward/backward."""
-    npad, d, r, rp, b, bp, c = dims
-    n_spec = pl.BlockSpec((bn, d), lambda i, j: (i, 0))
-    w_spec = pl.BlockSpec((d, bc), lambda i, j: (0, j))
-    row_spec = lambda width: pl.BlockSpec((bn, width), lambda i, j: (i, 0))
+    npad, dp, r, rp, b, bp, c = dims
+    nkd = dp // bd
     if kind == "fwd":
+        h_spec = pl.BlockSpec((bn, bd), lambda i, j, k: (i, k))
+        w_spec = pl.BlockSpec((bd, bc), lambda i, j, k: (k, j))
+        b_spec = pl.BlockSpec((1, bc), lambda i, j, k: (0, j))
+        row_spec = lambda width: pl.BlockSpec((bn, width),
+                                              lambda i, j, k: (i, 0))
         return pl.pallas_call(
             functools.partial(_fwd_body, bn, bc, r, rp, b, bp),
-            grid=(npad // bn, c // bc),
-            in_specs=[n_spec, w_spec, row_spec(rp)],
+            grid=(npad // bn, c // bc, nkd),
+            in_specs=[h_spec, w_spec, b_spec, row_spec(rp)],
             out_specs=(row_spec(1), row_spec(rp)),
             out_shape=(jax.ShapeDtypeStruct((npad, 1), jnp.float32),
                        jax.ShapeDtypeStruct((npad, rp), jnp.float32)),
-            scratch_shapes=[pltpu.VMEM((bn, rp), jnp.float32)] * 3,
-            compiler_params=_SEQUENTIAL2,
+            scratch_shapes=[pltpu.VMEM((bn, bc), jnp.float32)]
+            + [pltpu.VMEM((bn, rp), jnp.float32)] * 3,
+            compiler_params=_SEQUENTIAL3,
             interpret=interpret,
-        )(h2p, wp, yp)
-    # bwd: column blocks outer, N minor; dh a revisited accumulator
-    cn_spec = pl.BlockSpec((bn, d), lambda j, i: (i, 0))
-    cw_spec = pl.BlockSpec((d, bc), lambda j, i: (0, j))
-    crow_spec = lambda width: pl.BlockSpec((bn, width), lambda j, i: (i, 0))
+        )(h2p, wp, biasp, yp)
+    # bwd: column blocks outer, 2·D/bd minor; both phases of a (j, i)
+    # cell map the same h/W/dh/dW d-block
+    kmap = lambda k2: jnp.where(k2 >= nkd, k2 - nkd, k2)
+    h_spec = pl.BlockSpec((bn, bd), lambda j, i, k2: (i, kmap(k2)))
+    w_spec = pl.BlockSpec((bd, bc), lambda j, i, k2: (kmap(k2), j))
+    b_spec = pl.BlockSpec((1, bc), lambda j, i, k2: (0, j))
+    row_spec = lambda width: pl.BlockSpec((bn, width),
+                                          lambda j, i, k2: (i, 0))
     return pl.pallas_call(
-        functools.partial(_bwd_body, bn, bc, d, r, rp, b, bp),
-        grid=(c // bc, npad // bn),
-        in_specs=[cn_spec, cw_spec, crow_spec(rp), crow_spec(rp),
-                  crow_spec(1)],
-        out_specs=(cn_spec, cw_spec),
-        out_shape=(jax.ShapeDtypeStruct((npad, d), jnp.float32),
-                   jax.ShapeDtypeStruct((d, c), wp.dtype)),
-        scratch_shapes=[pltpu.VMEM((d, bc), jnp.float32)],
-        compiler_params=_SEQUENTIAL2,
+        functools.partial(_bwd_body, bn, bc, nkd, r, rp, b, bp),
+        grid=(c // bc, npad // bn, 2 * nkd),
+        in_specs=[h_spec, w_spec, b_spec, row_spec(rp), row_spec(rp),
+                  row_spec(1)],
+        out_specs=(h_spec, w_spec, b_spec),
+        out_shape=(jax.ShapeDtypeStruct((npad, dp), jnp.float32),
+                   jax.ShapeDtypeStruct((dp, c), jnp.float32),
+                   jax.ShapeDtypeStruct((1, c), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((bn, bc), jnp.float32)] * 2,
+        compiler_params=_SEQUENTIAL3,
         interpret=interpret,
-    )(h2p, wp, yp, lsep, gp)
+    )(h2p, wp, biasp, yp, lsep, gp)
 
 
-def _check_shapes(h2, w, hashed_labels, num_buckets):
+def _check_shapes(h2, w, bias, hashed_labels, num_buckets):
     n, d = h2.shape
     r = hashed_labels.shape[-1]
     if hashed_labels.shape != (n, r):
         raise ValueError(f"labels {hashed_labels.shape} vs h {h2.shape}")
     if w.shape != (d, r * num_buckets):
         raise ValueError(f"w {w.shape} != ({d}, {r}*{num_buckets})")
+    if bias is not None and bias.shape != (r * num_buckets,):
+        raise ValueError(f"bias {bias.shape} != ({r}*{num_buckets},)")
     return n, d, r
 
 
-def _fused_fwd(h2, w, hashed_labels, num_buckets, block_n, block_c,
-               interpret):
-    n, d, r = _check_shapes(h2, w, hashed_labels, num_buckets)
+def _fused_fwd(h2, w, bias, hashed_labels, num_buckets, block_n, block_c,
+               block_d, interpret):
+    n, d, r = _check_shapes(h2, w, bias, hashed_labels, num_buckets)
     b = num_buckets
-    bn, bc, rp, bp = choose_fused_blocks(n, d, r, b, block_n, block_c)
-    h2p, wp, yp = _pad_operands(h2, w, hashed_labels, r, b, bn, rp, bp)
-    dims = (h2p.shape[0], d, r, rp, b, bp, rp * bp)
-    loss, lse = _fused_call("fwd", h2p, wp, yp, None, None, dims, bn, bc,
-                            interpret)
-    return loss[:n, 0], (h2, w, hashed_labels, lse[:n])
+    bn, bc, bd, rp, bp = choose_fused_blocks(n, d, r, b, block_n, block_c,
+                                             block_d)
+    h2p, wp, biasp, yp, dp = _pad_operands(h2, w, bias, hashed_labels, r,
+                                           b, bn, rp, bp, bd)
+    dims = (h2p.shape[0], dp, r, rp, b, bp, rp * bp)
+    loss, lse = _fused_call("fwd", h2p, wp, biasp, yp, None, None, dims,
+                            bn, bc, bd, interpret)
+    return loss[:n, 0], (h2, w, bias, hashed_labels, lse[:n])
 
 
-def _fused_bwd(num_buckets, block_n, block_c, interpret, res, g):
-    h2, w, hashed_labels, lse = res
-    n, d, r = _check_shapes(h2, w, hashed_labels, num_buckets)
+def _fused_bwd(num_buckets, block_n, block_c, block_d, interpret, res, g):
+    h2, w, bias, hashed_labels, lse = res
+    n, d, r = _check_shapes(h2, w, bias, hashed_labels, num_buckets)
     b = num_buckets
-    bn, bc, rp, bp = choose_fused_blocks(n, d, r, b, block_n, block_c)
-    h2p, wp, yp = _pad_operands(h2, w, hashed_labels, r, b, bn, rp, bp)
+    bn, bc, bd, rp, bp = choose_fused_blocks(n, d, r, b, block_n, block_c,
+                                             block_d)
+    h2p, wp, biasp, yp, dp = _pad_operands(h2, w, bias, hashed_labels, r,
+                                           b, bn, rp, bp, bd)
     npad = h2p.shape[0]
-    dims = (npad, d, r, rp, b, bp, rp * bp)
+    dims = (npad, dp, r, rp, b, bp, rp * bp)
     # padded rows/heads carry zero cotangent -> zero dlogits
     gp = jnp.pad(g.astype(jnp.float32).reshape(n, 1),
                  ((0, npad - n), (0, 0)))
     lsep = jnp.pad(lse, ((0, npad - n), (0, 0)))
-    dhp, dwp = _fused_call("bwd", h2p, wp, yp, lsep, gp, dims, bn, bc,
-                           interpret)
-    dh = dhp[:n].astype(h2.dtype)
-    dw = dwp.reshape(d, rp, bp)[:, :r, :b].reshape(d, r * b)
-    return dh, dw, None
+    dhp, dwp, dbp = _fused_call("bwd", h2p, wp, biasp, yp, lsep, gp,
+                                dims, bn, bc, bd, interpret)
+    dh = dhp[:n, :d].astype(h2.dtype)
+    dw = dwp.reshape(dp, rp, bp)[:d, :r, :b].reshape(d, r * b) \
+        .astype(w.dtype)
+    if bias is None:
+        return dh, dw, None, None
+    db = dbp.reshape(rp, bp)[:r, :b].reshape(r * b).astype(bias.dtype)
+    return dh, dw, db, None
 
 
 mach_fused_xent_pallas.defvjp(_fused_fwd, _fused_bwd)
@@ -550,9 +665,10 @@ mach_fused_xent_pallas.defvjp(_fused_fwd, _fused_bwd)
 # Sparse-h (padded-ELL) entry point
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
 def mach_fused_xent_sparse_pallas(cols: jnp.ndarray, vals: jnp.ndarray,
                                   w: jnp.ndarray,
+                                  bias: Optional[jnp.ndarray],
                                   hashed_labels: jnp.ndarray,
                                   num_buckets: int,
                                   block_n: Optional[int] = None,
@@ -562,31 +678,34 @@ def mach_fused_xent_sparse_pallas(cols: jnp.ndarray, vals: jnp.ndarray,
     """Per-example summed R-head CE from a padded-ELL sparse batch.
 
     cols/vals (N, J) — row n's active feature ids and weights (padding
-    carries val 0; duplicate ids sum); w (d, R·B); hashed_labels (N, R)
-    int32 -> (N,) f32.  Neither the (N, R·B) logits tensor nor a dense
-    (N, d) activation ever exists in HBM in either pass.  Differentiable
-    wrt w only — ``vals`` is data, not a parameter, and receives a zero
-    cotangent (use the densified reference if you need feature grads)."""
-    out, _ = _sparse_fwd(cols, vals, w, hashed_labels, num_buckets,
+    carries val 0; duplicate ids sum); w (d, R·B); bias (R·B,) or None
+    (an in-kernel operand — the ELL width stays J, no unit-feature
+    column); hashed_labels (N, R) int32 -> (N,) f32.  Neither the
+    (N, R·B) logits tensor nor a dense (N, d) activation ever exists in
+    HBM in either pass.  Differentiable wrt w and bias only — ``vals``
+    is data, not a parameter, and receives a zero cotangent (use the
+    densified reference if you need feature grads)."""
+    out, _ = _sparse_fwd(cols, vals, w, bias, hashed_labels, num_buckets,
                          block_n, block_c, block_d, interpret)
     return out
 
 
-def _sparse_call(kind, colsp, valsp, wp, yp, lsep, gp, dims, bn, bc, bd,
-                 jp, interpret):
+def _sparse_call(kind, colsp, valsp, wp, biasp, yp, lsep, gp, dims, bn,
+                 bc, bd, jp, interpret):
     """Shared pallas_call builder for the sparse forward/backward."""
     npad, dp, r, rp, b, bp, c = dims
     nkd = dp // bd
     if kind == "fwd":
         ell_spec = pl.BlockSpec((bn, jp), lambda i, j, k: (i, 0))
         w_spec = pl.BlockSpec((bd, bc), lambda i, j, k: (k, j))
+        b_spec = pl.BlockSpec((1, bc), lambda i, j, k: (0, j))
         row_spec = lambda width: pl.BlockSpec((bn, width),
                                               lambda i, j, k: (i, 0))
         return pl.pallas_call(
             functools.partial(_sparse_fwd_body, bn, bc, bd, r, rp, b, bp,
                               jp),
             grid=(npad // bn, c // bc, nkd),
-            in_specs=[ell_spec, ell_spec, w_spec, row_spec(rp)],
+            in_specs=[ell_spec, ell_spec, w_spec, b_spec, row_spec(rp)],
             out_specs=(row_spec(1), row_spec(rp)),
             out_shape=(jax.ShapeDtypeStruct((npad, 1), jnp.float32),
                        jax.ShapeDtypeStruct((npad, rp), jnp.float32)),
@@ -594,29 +713,31 @@ def _sparse_call(kind, colsp, valsp, wp, yp, lsep, gp, dims, bn, bc, bd,
             + [pltpu.VMEM((bn, rp), jnp.float32)] * 3,
             compiler_params=_SEQUENTIAL3,
             interpret=interpret,
-        )(colsp, valsp, wp, yp)
+        )(colsp, valsp, wp, biasp, yp)
     # bwd: both phases of a (j, i) cell map the same dW/W d-block
     kmap = lambda k2: jnp.where(k2 >= nkd, k2 - nkd, k2)
     dw_spec = pl.BlockSpec((bd, bc), lambda j, i, k2: (kmap(k2), j))
+    b_spec = pl.BlockSpec((1, bc), lambda j, i, k2: (0, j))
     ell_spec = pl.BlockSpec((bn, jp), lambda j, i, k2: (i, 0))
     row_spec = lambda width: pl.BlockSpec((bn, width),
                                           lambda j, i, k2: (i, 0))
     return pl.pallas_call(
-        functools.partial(_sparse_bwd_body, bn, bc, bd, nkd, r, rp, b, bp,
-                          jp),
+        functools.partial(_sparse_bwd_body, bn, bc, bd, nkd, r, rp, b,
+                          bp, jp),
         grid=(c // bc, npad // bn, 2 * nkd),
-        in_specs=[ell_spec, ell_spec, dw_spec, row_spec(rp),
+        in_specs=[ell_spec, ell_spec, dw_spec, b_spec, row_spec(rp),
                   row_spec(rp), row_spec(1)],
-        out_specs=dw_spec,
-        out_shape=jax.ShapeDtypeStruct((dp, c), jnp.float32),
+        out_specs=(dw_spec, b_spec),
+        out_shape=(jax.ShapeDtypeStruct((dp, c), jnp.float32),
+                   jax.ShapeDtypeStruct((1, c), jnp.float32)),
         scratch_shapes=[pltpu.VMEM((bn, bc), jnp.float32),
                         pltpu.VMEM((bn, bc), jnp.float32)],
         compiler_params=_SEQUENTIAL3,
         interpret=interpret,
-    )(colsp, valsp, wp, yp, lsep, gp)
+    )(colsp, valsp, wp, biasp, yp, lsep, gp)
 
 
-def _check_sparse_shapes(cols, vals, w, hashed_labels, num_buckets):
+def _check_sparse_shapes(cols, vals, w, bias, hashed_labels, num_buckets):
     n, j = cols.shape
     d = w.shape[0]
     r = hashed_labels.shape[-1]
@@ -627,43 +748,49 @@ def _check_sparse_shapes(cols, vals, w, hashed_labels, num_buckets):
                          f"{cols.shape}")
     if w.shape != (d, r * num_buckets):
         raise ValueError(f"w {w.shape} != ({d}, {r}*{num_buckets})")
+    if bias is not None and bias.shape != (r * num_buckets,):
+        raise ValueError(f"bias {bias.shape} != ({r}*{num_buckets},)")
     return n, d, r, j
 
 
-def _sparse_fwd(cols, vals, w, hashed_labels, num_buckets, block_n,
+def _sparse_fwd(cols, vals, w, bias, hashed_labels, num_buckets, block_n,
                 block_c, block_d, interpret):
-    n, d, r, j = _check_sparse_shapes(cols, vals, w, hashed_labels,
+    n, d, r, j = _check_sparse_shapes(cols, vals, w, bias, hashed_labels,
                                       num_buckets)
     b = num_buckets
     bn, bc, bd, rp, bp, jp = choose_sparse_blocks(n, d, r, b, j, block_n,
                                                   block_c, block_d)
-    colsp, valsp, wp, yp, dp = _pad_sparse_operands(
-        cols, vals, w, hashed_labels, r, b, bn, rp, bp, bd, jp)
+    colsp, valsp, wp, biasp, yp, dp = _pad_sparse_operands(
+        cols, vals, w, bias, hashed_labels, r, b, bn, rp, bp, bd, jp)
     dims = (colsp.shape[0], dp, r, rp, b, bp, rp * bp)
-    loss, lse = _sparse_call("fwd", colsp, valsp, wp, yp, None, None,
-                             dims, bn, bc, bd, jp, interpret)
-    return loss[:n, 0], (cols, vals, w, hashed_labels, lse[:n])
+    loss, lse = _sparse_call("fwd", colsp, valsp, wp, biasp, yp, None,
+                             None, dims, bn, bc, bd, jp, interpret)
+    return loss[:n, 0], (cols, vals, w, bias, hashed_labels, lse[:n])
 
 
 def _sparse_bwd(num_buckets, block_n, block_c, block_d, interpret, res, g):
-    cols, vals, w, hashed_labels, lse = res
-    n, d, r, j = _check_sparse_shapes(cols, vals, w, hashed_labels,
+    cols, vals, w, bias, hashed_labels, lse = res
+    n, d, r, j = _check_sparse_shapes(cols, vals, w, bias, hashed_labels,
                                       num_buckets)
     b = num_buckets
     bn, bc, bd, rp, bp, jp = choose_sparse_blocks(n, d, r, b, j, block_n,
                                                   block_c, block_d)
-    colsp, valsp, wp, yp, dp = _pad_sparse_operands(
-        cols, vals, w, hashed_labels, r, b, bn, rp, bp, bd, jp)
+    colsp, valsp, wp, biasp, yp, dp = _pad_sparse_operands(
+        cols, vals, w, bias, hashed_labels, r, b, bn, rp, bp, bd, jp)
     npad = colsp.shape[0]
     dims = (npad, dp, r, rp, b, bp, rp * bp)
     gp = jnp.pad(g.astype(jnp.float32).reshape(n, 1),
                  ((0, npad - n), (0, 0)))
     lsep = jnp.pad(lse, ((0, npad - n), (0, 0)))
-    dwp = _sparse_call("bwd", colsp, valsp, wp, yp, lsep, gp, dims, bn,
-                       bc, bd, jp, interpret)
-    dw = dwp.reshape(dp, rp, bp)[:d, :r, :b].reshape(d, r * b)
+    dwp, dbp = _sparse_call("bwd", colsp, valsp, wp, biasp, yp, lsep, gp,
+                            dims, bn, bc, bd, jp, interpret)
+    dw = dwp.reshape(dp, rp, bp)[:d, :r, :b].reshape(d, r * b) \
+        .astype(w.dtype)
     # features are data: zero cotangent for vals, none for int cols/labels
-    return None, jnp.zeros_like(vals), dw.astype(w.dtype), None
+    db = (None if bias is None
+          else dbp.reshape(rp, bp)[:r, :b].reshape(r * b)
+          .astype(bias.dtype))
+    return None, jnp.zeros_like(vals), dw, db, None
 
 
 mach_fused_xent_sparse_pallas.defvjp(_sparse_fwd, _sparse_bwd)

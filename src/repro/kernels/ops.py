@@ -196,6 +196,9 @@ def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
                         hashed_labels: jnp.ndarray,
                         *, num_buckets: int, nnz_max: int,
                         bias: Optional[jnp.ndarray] = None,
+                        block_n: Optional[int] = None,
+                        block_c: Optional[int] = None,
+                        block_d: Optional[int] = None,
                         use_pallas: Optional[bool] = None,
                         interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sparse-feature fused projection + R-head CE (the ODP d=422k
@@ -203,19 +206,21 @@ def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
 
     indptr (N+1,), indices (nnz,), values (nnz,) — a CSR batch over d
     features; w (d, R·B) head kernel; hashed_labels (N, R) bucket ids;
-    optional bias (R·B,) folded in as an always-on unit feature ->
-    (N,) f32 per-example loss.  The bias column makes the kernel's ELL
-    width nnz_max+1, so keep nnz_max off lane multiples (129 pads to
-    256 lanes, doubling the densify-tile work; 120 -> 121 pads to 128).
+    optional bias (R·B,) — a native kernel operand, broadcast-added to
+    the logits tile at the last d block, so the ELL width stays exactly
+    nnz_max (no unit-feature column) -> (N,) f32 per-example loss.
+    ``block_n/block_c/block_d`` pin the kernel tiling (benchmarks and
+    tests); None lets ``choose_sparse_blocks`` fit the VMEM budget.
 
     On the Pallas path neither the (N, R·B) logits tensor nor a dense
     (N, d) activation ever exists in HBM in either pass — the batch is
     re-laid-out as padded ELL (O(N·nnz_max)), activation slices are
-    densified per tile in VMEM, and the VJP scatter-adds dW without a
-    logits round-trip.  The fallback is the densifying reference — the
-    right CPU algorithm, and the parity oracle.  Differentiable wrt w
-    and bias; ``values`` gets a ZERO cotangent on the kernel path
-    (features are data — use the reference if you need feature grads).
+    densified per tile in VMEM, and the VJP scatter-adds dW (and
+    reduces dbias) without a logits round-trip.  The fallback is the
+    densifying reference — the right CPU algorithm, and the parity
+    oracle.  Differentiable wrt w and bias; ``values`` gets a ZERO
+    cotangent on the kernel path (features are data — use the
+    reference if you need feature grads).
     """
     d = w.shape[0]
     r = hashed_labels.shape[-1]
@@ -230,35 +235,36 @@ def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
             indptr, indices, jax.lax.stop_gradient(values), w,
             hashed_labels.astype(jnp.int32), num_buckets, bias=bias)
     cols, vals = csr_to_ell(indptr, indices, values, nnz_max, d)
-    if bias is not None:
-        n = cols.shape[0]
-        cols = jnp.concatenate(
-            [cols, jnp.full((n, 1), d, jnp.int32)], axis=1)
-        vals = jnp.concatenate(
-            [vals, jnp.ones((n, 1), vals.dtype)], axis=1)
-        w = jnp.concatenate(
-            [w, bias.reshape(1, -1).astype(w.dtype)], axis=0)
     interp = (not _on_tpu()) if interpret is None else interpret
     return mach_fused_xent_sparse_pallas(
-        cols, vals, w, hashed_labels.astype(jnp.int32), num_buckets,
-        None, None, None, interp)
+        cols, vals, w, bias, hashed_labels.astype(jnp.int32),
+        num_buckets, block_n, block_c, block_d, interp)
 
 
 def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
                     hashed_labels: jnp.ndarray,
                     *, num_buckets: int,
+                    bias: Optional[jnp.ndarray] = None,
+                    block_n: Optional[int] = None,
+                    block_c: Optional[int] = None,
+                    block_d: Optional[int] = None,
                     use_pallas: Optional[bool] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Logit-free fused projection + R-head CE (training fast path).
 
     h: (..., d) hidden states; w: (d, R·B) head kernel;
-    hashed_labels: (..., R) bucket ids -> (...,) f32 per-example loss.
+    hashed_labels: (..., R) bucket ids; optional bias (R·B,) — a native
+    kernel operand (no (d+1, R·B) W-concat) -> (...,) f32 per-example
+    loss.  ``block_n/block_c/block_d`` pin the kernel tiling
+    (benchmarks and tests); None lets ``choose_fused_blocks`` fit the
+    VMEM budget.
 
     On the Pallas path the (…, R·B) logits tensor never exists in HBM
-    in either the forward or the backward pass (activation memory is
-    O(N·d + N·R)); the fallback is the materializing reference — the
-    right CPU algorithm, and the parity oracle.  Differentiable wrt h
-    and w (custom VJP with recomputing backward kernels).
+    in either the forward or the backward pass, and W/h stream through
+    d-blocked VMEM tiles (activation memory is O(N·d + N·R), per-step
+    VMEM independent of d); the fallback is the materializing reference
+    — the right CPU algorithm, and the parity oracle.  Differentiable
+    wrt h, w and bias (custom VJP with recomputing backward kernels).
     """
     lead = h.shape[:-1]
     d = h.shape[-1]
@@ -268,10 +274,10 @@ def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
         interp = (not _on_tpu()) if interpret is None else interpret
-        out = mach_fused_xent_pallas(h2, w, lbl, num_buckets, None, None,
-                                     interp)
+        out = mach_fused_xent_pallas(h2, w, bias, lbl, num_buckets,
+                                     block_n, block_c, block_d, interp)
     else:
-        out = ref.mach_fused_xent_ref(h2, w, lbl, num_buckets)
+        out = ref.mach_fused_xent_ref(h2, w, lbl, num_buckets, bias=bias)
     return out.reshape(lead)
 
 

@@ -89,17 +89,22 @@ def mach_xent_ref(logits: jnp.ndarray, hashed_labels: jnp.ndarray) -> jnp.ndarra
 
 def mach_fused_xent_ref(h2: jnp.ndarray, w: jnp.ndarray,
                         hashed_labels: jnp.ndarray,
-                        num_buckets: int) -> jnp.ndarray:
+                        num_buckets: int,
+                        bias: jnp.ndarray = None) -> jnp.ndarray:
     """Logit-materializing oracle for the fused projection+CE kernel.
 
-    h2: (N, d); w: (d, R·B); hashed_labels: (N, R) int32 -> (N,) f32.
-    Exactly the computation the fused kernel avoids: the full (N, R·B)
-    logits tensor is formed (in f32, matching the kernel's accumulation
-    dtype), then reduced by ``mach_xent_ref``.
+    h2: (N, d); w: (d, R·B); hashed_labels: (N, R) int32; optional
+    bias (R·B,) added to every logits row (the kernel's in-VMEM
+    broadcast-add) -> (N,) f32.  Exactly the computation the fused
+    kernel avoids: the full (N, R·B) logits tensor is formed (in f32,
+    matching the kernel's accumulation dtype), then reduced by
+    ``mach_xent_ref``.
     """
     n = h2.shape[0]
     r = hashed_labels.shape[-1]
     logits = jnp.dot(h2.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)[None, :]
     return mach_xent_ref(logits.reshape(n, r, num_buckets), hashed_labels)
 
 
@@ -129,18 +134,13 @@ def mach_fused_xent_csr_ref(indptr: jnp.ndarray, indices: jnp.ndarray,
     scattered into a dense (N, d) activation (in f32 — the kernel's
     per-tile densification accumulates duplicate ids in f32, so the
     oracle must too, like ``mach_fused_xent_ref``'s f32 logits), then
-    reduced through the materializing ``mach_fused_xent_ref``.  ``bias``
-    (R·B,) is folded in as an always-on unit feature (matching how
-    callers augment the sparse batch), so d/d(bias) flows through the
-    same path."""
+    reduced through the materializing ``mach_fused_xent_ref``, whose
+    ``bias`` (R·B,) broadcast-add matches the kernels' in-VMEM bias
+    operand — d/d(bias) flows through the same path."""
     x = csr_densify_ref(indptr, indices, values.astype(jnp.float32),
                         w.shape[0])
-    if bias is not None:
-        x = jnp.concatenate(
-            [x, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
-        w = jnp.concatenate(
-            [w, bias.reshape(1, -1).astype(w.dtype)], axis=0)
-    return mach_fused_xent_ref(x, w, hashed_labels, num_buckets)
+    return mach_fused_xent_ref(x, w, hashed_labels, num_buckets,
+                               bias=bias)
 
 
 def flash_attention_ref(q, k, v, causal: bool = True, window=None):

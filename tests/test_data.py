@@ -98,6 +98,43 @@ def test_sparse_dataset_deterministic_and_dense_fallback():
                               np.asarray(sbt.indices))
 
 
+def test_sparse_dataset_zipf_doc_lengths():
+    """length_zipf_a > 0: ragged CSR rows — lengths in
+    [sig_features, nnz], Zipf-skewed toward short docs, deterministic
+    in (seed, step), and the dense fallback still densifies exactly."""
+    from repro.data import SparseExtremeDataConfig, SparseExtremeDataset
+
+    cfg = SparseExtremeDataConfig(num_classes=64, num_features=96, nnz=12,
+                                  sig_features=4, seed=5,
+                                  length_zipf_a=1.0)
+    ds1, ds2 = SparseExtremeDataset(cfg), SparseExtremeDataset(cfg)
+    sb1, y1 = ds1.batch_at(3, 64)
+    sb2, y2 = ds2.batch_at(3, 64)
+    np.testing.assert_array_equal(np.asarray(sb1.indptr),
+                                  np.asarray(sb2.indptr))
+    np.testing.assert_array_equal(np.asarray(sb1.indices),
+                                  np.asarray(sb2.indices))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    lens = np.diff(np.asarray(sb1.indptr))
+    assert lens.min() >= 4 and lens.max() <= 12
+    assert len(np.unique(lens)) > 1              # actually ragged
+    # Zipf skew: short docs outnumber long ones
+    assert (lens <= 7).sum() > (lens > 7).sum()
+    # rows stay L2-normalized over their kept entries
+    vals = np.asarray(sb1.values)
+    indptr = np.asarray(sb1.indptr)
+    for i in range(sb1.num_rows):
+        np.testing.assert_allclose(
+            np.linalg.norm(vals[indptr[i]:indptr[i + 1]]), 1.0,
+            rtol=1e-5)
+    # dense fallback is the exact densification of the ragged batch
+    xd, yd = ds1.batch_at(3, 64, format="dense")
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(y1))
+    np.testing.assert_allclose(np.asarray(xd),
+                               np.asarray(sb1.to_dense()),
+                               rtol=0, atol=0)
+
+
 def test_sparse_batch_is_jit_transparent():
     import jax
 

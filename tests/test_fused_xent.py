@@ -1,11 +1,13 @@
 """Fused projection+CE kernel vs oracles: values, grads, memory shape.
 
 Parity ladder (all interpret=True on CPU):
-  kernel  ==  ref.mach_fused_xent_ref        (values + dh/dW grads)
+  kernel  ==  ref.mach_fused_xent_ref        (values + dh/dW/dbias grads)
   ops.mach_fused_xent / head.fused_loss  ==  mach_loss(head.apply(...))
   model.loss(mach_fused_loss=True)  ==  model.loss (materializing path)
-plus the structural claim the kernel exists for: no (N, R·B)-sized
-tensor appears in the jaxpr of either pass.
+plus the structural claims the kernel exists for: no (N, R·B)-sized
+tensor in the jaxpr of either pass, no (d+1, R·B) bias-concat on the
+dense head path, and the block choosers provably respecting their VMEM
+budget (the d=12288 LM-scale case included).
 """
 
 import dataclasses
@@ -17,18 +19,23 @@ import pytest
 
 from repro.core.mach import MACHConfig, MACHOutputHead, mach_loss
 from repro.kernels import ops, ref
-from repro.kernels.mach_fused_xent import (choose_fused_blocks,
-                                           mach_fused_xent_pallas)
+from repro.kernels.mach_fused_xent import (DEFAULT_VMEM_BUDGET,
+                                           choose_fused_blocks,
+                                           choose_sparse_blocks,
+                                           dense_tile_bytes,
+                                           mach_fused_xent_pallas,
+                                           sparse_tile_bytes)
 from repro.models import LanguageModel, ModelConfig
 
 
-def _case(n, d, r, b, seed=0, dtype=jnp.float32):
-    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed + n + r), 4)
-    h = (jax.random.normal(k1, (n, d)) / np.sqrt(d)).astype(dtype)
-    w = (jax.random.normal(k2, (d, r * b)) / np.sqrt(d)).astype(dtype)
-    y = jax.random.randint(k3, (n, r), 0, b)
-    g = jax.random.normal(k4, (n,))
-    return h, w, y, g
+def _case(n, d, r, b, seed=0, dtype=jnp.float32, with_bias=False):
+    """Shared dense fixture (benchmarks/common.py) — the benchmark's
+    parity gate and these tests see the same inputs."""
+    from benchmarks.common import make_dense_case
+    h, w, bias, y, g = make_dense_case(n, d, r, b, seed=seed, dtype=dtype)
+    if not with_bias:
+        return h, w, y, g
+    return h, w, bias, y, g
 
 
 # ---------------------------------------------------------------------------
@@ -45,13 +52,14 @@ def _case(n, d, r, b, seed=0, dtype=jnp.float32):
 def test_fused_xent_matches_ref(n, d, r, b, dtype):
     h, w, y, g = _case(n, d, r, b, dtype=dtype)
     lr = ref.mach_fused_xent_ref(h, w, y, b)
-    lk = mach_fused_xent_pallas(h, w, y, b, None, None, True)
+    lk = mach_fused_xent_pallas(h, w, None, y, b, None, None, None, True)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
                                rtol=1e-5, atol=1e-5)
     dr = jax.grad(lambda h_, w_: jnp.sum(
         ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
     dk = jax.grad(lambda h_, w_: jnp.sum(
-        mach_fused_xent_pallas(h_, w_, y, b, None, None, True) * g),
+        mach_fused_xent_pallas(h_, w_, None, y, b, None, None, None,
+                               True) * g),
         argnums=(0, 1))(h, w)
     for a, k in zip(dr, dk):
         assert a.dtype == k.dtype
@@ -60,43 +68,261 @@ def test_fused_xent_matches_ref(n, d, r, b, dtype):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,d,r,b", [
+    (16, 32, 4, 8),
+    (13, 32, 6, 24),       # ragged N
+    (2, 16, 20, 512),      # B=512, tiny N
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_xent_bias_matches_ref(n, d, r, b, dtype):
+    """The in-kernel bias operand: values and (dh, dW, dbias) against
+    the materializing reference."""
+    h, w, bias, y, g = _case(n, d, r, b, dtype=dtype, with_bias=True)
+    lr = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    lk = mach_fused_xent_pallas(h, w, bias, y, b, None, None, None, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-5)
+    dr = jax.grad(lambda h_, w_, b_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b, bias=b_) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    dk = jax.grad(lambda h_, w_, b_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, b_, y, b, None, None, None,
+                               True) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    # bf16 grads agree to 1 ulp (the final f32->bf16 cast may round a
+    # near-midpoint value differently between the two paths)
+    rtol, atol = ((1e-2, 1e-4) if dtype == jnp.bfloat16
+                  else (1e-4, 1e-5))
+    for a, k in zip(dr, dk):
+        assert a.dtype == k.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(k, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
 def test_fused_xent_head_split_blocks():
     """B larger than the column block: a head's logsumexp streams across
-    blocks through the online rescaling path."""
+    blocks through the online rescaling path (bias included)."""
     n, d, r, b = 9, 16, 3, 256
-    h, w, y, g = _case(n, d, r, b)
-    bn, bc, rp, bp = choose_fused_blocks(n, d, r, b, None, 64)
+    h, w, bias, y, g = _case(n, d, r, b, with_bias=True)
+    bn, bc, bd, rp, bp = choose_fused_blocks(n, d, r, b, None, 64)
     assert bc < b and bp % bc == 0          # the path under test
-    lr = ref.mach_fused_xent_ref(h, w, y, b)
-    lk = mach_fused_xent_pallas(h, w, y, b, None, 64, True)
+    lr = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    lk = mach_fused_xent_pallas(h, w, bias, y, b, None, 64, None, True)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
                                rtol=1e-5, atol=1e-6)
-    dr = jax.grad(lambda h_, w_: jnp.sum(
-        ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
-    dk = jax.grad(lambda h_, w_: jnp.sum(
-        mach_fused_xent_pallas(h_, w_, y, b, None, 64, True) * g),
-        argnums=(0, 1))(h, w)
+    dr = jax.grad(lambda h_, w_, b_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b, bias=b_) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    dk = jax.grad(lambda h_, w_, b_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, b_, y, b, None, 64, None,
+                               True) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    for a, k in zip(dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fused_xent_d_blocked():
+    """d larger than the d block: logits accumulate across d blocks in
+    scratch; dh/dW ride the revisited d-blocked output windows."""
+    n, d, r, b = 12, 200, 4, 32
+    h, w, bias, y, g = _case(n, d, r, b, with_bias=True)
+    bn, bc, bd, rp, bp = choose_fused_blocks(n, d, r, b, None, None, 64)
+    assert bd < d                            # the path under test
+    lr = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    lk = mach_fused_xent_pallas(h, w, bias, y, b, None, None, 64, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-6)
+    dr = jax.grad(lambda h_, w_, b_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b, bias=b_) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    dk = jax.grad(lambda h_, w_, b_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, b_, y, b, None, None, 64,
+                               True) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    for a, k in zip(dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fused_xent_d_blocked_and_head_split():
+    """Both streaming paths at once: d blocked AND a head's logsumexp
+    spanning column blocks."""
+    n, d, r, b = 9, 200, 3, 256
+    h, w, bias, y, g = _case(n, d, r, b, with_bias=True)
+    bn, bc, bd, rp, bp = choose_fused_blocks(n, d, r, b, None, 64, 64)
+    assert bc < b and bd < d
+    lr = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    lk = mach_fused_xent_pallas(h, w, bias, y, b, None, 64, 64, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-6)
+    dr = jax.grad(lambda h_, w_, b_: jnp.sum(
+        ref.mach_fused_xent_ref(h_, w_, y, b, bias=b_) * g),
+        argnums=(0, 1, 2))(h, w, bias)
+    dk = jax.grad(lambda h_, w_, b_: jnp.sum(
+        mach_fused_xent_pallas(h_, w_, b_, y, b, None, 64, 64, True) * g),
+        argnums=(0, 1, 2))(h, w, bias)
     for a, k in zip(dr, dk):
         np.testing.assert_allclose(np.asarray(a), np.asarray(k),
                                    rtol=1e-4, atol=1e-6)
 
 
 def test_fused_xent_acceptance_case():
-    """The PR's acceptance config: (N=256, d=128, R=16, B=512) in
+    """The PR-2 acceptance config: (N=256, d=128, R=16, B=512) in
     interpret mode — |Δloss| ≤ 1e-5, grads allclose at rtol 1e-4."""
     n, d, r, b = 256, 128, 16, 512
     h, w, y, g = _case(n, d, r, b, seed=7)
     lr = ref.mach_fused_xent_ref(h, w, y, b)
-    lk = mach_fused_xent_pallas(h, w, y, b, None, None, True)
+    lk = mach_fused_xent_pallas(h, w, None, y, b, None, None, None, True)
     assert float(jnp.max(jnp.abs(lr - lk))) <= 1e-5
     dr = jax.grad(lambda h_, w_: jnp.sum(
         ref.mach_fused_xent_ref(h_, w_, y, b) * g), argnums=(0, 1))(h, w)
     dk = jax.grad(lambda h_, w_: jnp.sum(
-        mach_fused_xent_pallas(h_, w_, y, b, None, None, True) * g),
+        mach_fused_xent_pallas(h_, w_, None, y, b, None, None, None,
+                               True) * g),
         argnums=(0, 1))(h, w)
     for a, k in zip(dr, dk):
         np.testing.assert_allclose(np.asarray(a), np.asarray(k),
                                    rtol=1e-4, atol=1e-6)
+
+
+def test_fused_xent_lm_scale_d_acceptance():
+    """This PR's acceptance config: d=12288 (mistral-large d_model) at
+    (R=32, B=512) — the shape whose old tiling silently blew the VMEM
+    budget ~2x.  Two claims: (1) choose_fused_blocks at the confirmed
+    N=256 shape yields a tiling whose accounted tile bytes fit the
+    default 6 MB budget; (2) values + (dh, dW, dbias) match the
+    materializing reference through the d-blocked kernels in interpret
+    mode at that d/R/B.  Parity runs at N=16 — the (C/bc, D/bd) grid
+    axes under test are N-independent, and interpret-mode cost is per
+    grid step — with the chooser's own (budget-checked) tiling, which
+    streams both axes exactly like the N=256 one."""
+    n, d, r, b = 16, 12288, 32, 512
+    bn, bc, bd, rp, bp = choose_fused_blocks(256, d, r, b)
+    assert dense_tile_bytes(bn, bc, bd, rp) <= DEFAULT_VMEM_BUDGET
+    assert bd < d and bc < r * b            # both axes actually stream
+    bn2, bc2, bd2, rp2, _ = choose_fused_blocks(n, d, r, b)
+    assert dense_tile_bytes(bn2, bc2, bd2, rp2) <= DEFAULT_VMEM_BUDGET
+    assert bd2 < d and bc2 < r * b
+    h, w, bias, y, g = _case(n, d, r, b, seed=3, with_bias=True)
+
+    @jax.jit
+    def kernel_vag(h_, w_, b_):
+        return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+            mach_fused_xent_pallas(hh, ww, bb, y, b, None, None, None,
+                                   True) * g),
+            argnums=(0, 1, 2))(h_, w_, b_)
+
+    @jax.jit
+    def ref_vag(h_, w_, b_):
+        return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+            ref.mach_fused_xent_ref(hh, ww, y, b, bias=bb) * g),
+            argnums=(0, 1, 2))(h_, w_, b_)
+
+    lr, dr = ref_vag(h, w, bias)
+    lk, dk = kernel_vag(h, w, bias)
+    np.testing.assert_allclose(float(lr), float(lk), rtol=1e-6, atol=1e-4)
+    for name, a, k in zip(("dh", "dw", "dbias"), dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# block choosers: provably within the VMEM budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,r,b", [
+    (12288, 32, 512),      # the confirmed blowout case (ISSUE 4)
+    (8192, 16, 2048),      # R·B = 32k at LM-scale d
+    (4096, 20, 512),       # imagenet-21k head on a 4k trunk
+    (1024, 25, 32),        # ODP head
+    (128, 16, 512),        # the PR-2 acceptance shape
+    (32, 4, 8),            # tiny test shape
+])
+def test_choose_fused_blocks_respects_budget(d, r, b):
+    bn, bc, bd, rp, bp = choose_fused_blocks(256, d, r, b)
+    assert dense_tile_bytes(bn, bc, bd, rp) <= DEFAULT_VMEM_BUDGET
+    # structural invariants the kernels rely on
+    assert bn % 8 == 0 and bd % 8 == 0
+    assert (rp * bp) % bc == 0 and rp >= r and bp >= b
+
+
+@pytest.mark.parametrize("d,r,b,j", [
+    (422_713, 25, 32, 128),    # paper ODP: d=422k bag-of-words
+    (8192, 8, 64, 1024),       # high-nnz regime (scalar-gather TODO)
+    (4096, 20, 512, 64),
+    (96, 4, 16, 8),
+])
+def test_choose_sparse_blocks_respects_budget(d, r, b, j):
+    bn, bc, bd, rp, bp, jp = choose_sparse_blocks(256, d, r, b, j)
+    assert sparse_tile_bytes(bn, bc, bd, rp, jp) <= DEFAULT_VMEM_BUDGET
+    assert bn % 8 == 0 and bd % 8 == 0 and jp % 128 == 0
+    assert (rp * bp) % bc == 0 and rp >= r and bp >= b
+
+
+def test_choosers_raise_when_budget_impossible():
+    """No silent over-budget clamp: an unaffordable budget raises
+    instead of returning a tiling that overflows (the old _LANE-clamp
+    bug returned bn=128, bc=128 at ~12.7 MB against 6 MB)."""
+    with pytest.raises(ValueError, match="vmem_budget"):
+        choose_fused_blocks(256, 12288, 32, 512, vmem_budget=100_000)
+    with pytest.raises(ValueError, match="vmem_budget"):
+        choose_sparse_blocks(256, 422_713, 25, 32, 1024,
+                             vmem_budget=100_000)
+
+
+def test_ops_threads_block_overrides(monkeypatch):
+    """Benchmarks/tests can pin blocks through the public dispatch:
+    ops.mach_fused_xent forwards block_n/block_c/block_d to the kernel
+    (which hands them to the chooser), and parity holds under pinned
+    blocks."""
+    from repro.kernels import mach_fused_xent as kmod
+
+    seen = []
+    orig = kmod.choose_fused_blocks
+
+    def spy(n, d, r, b, block_n=None, block_c=None, block_d=None, **kw):
+        seen.append((block_n, block_c, block_d))
+        return orig(n, d, r, b, block_n, block_c, block_d, **kw)
+
+    monkeypatch.setattr(kmod, "choose_fused_blocks", spy)
+    n, d, r, b = 10, 96, 4, 64
+    h, w, bias, y, g = _case(n, d, r, b, with_bias=True)
+    out = ops.mach_fused_xent(h, w, y, num_buckets=b, bias=bias,
+                              block_n=8, block_c=64, block_d=32,
+                              use_pallas=True, interpret=True)
+    assert seen and all(blk == (8, 64, 32) for blk in seen)
+    lr = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_csr_threads_block_overrides(monkeypatch):
+    from repro.kernels import mach_fused_xent as kmod
+
+    seen = []
+    orig = kmod.choose_sparse_blocks
+
+    def spy(n, d, r, b, j, block_n=None, block_c=None, block_d=None,
+            **kw):
+        seen.append((block_n, block_c, block_d))
+        return orig(n, d, r, b, j, block_n, block_c, block_d, **kw)
+
+    monkeypatch.setattr(kmod, "choose_sparse_blocks", spy)
+    from benchmarks.common import make_csr_case
+    n, d, r, b, nnz = 9, 96, 4, 32, 6
+    indptr, indices, values, w, bias, y, g = make_csr_case(n, d, r, b,
+                                                           nnz)
+    out = ops.mach_fused_xent_csr(
+        indptr, indices, values, w, y, num_buckets=b, nnz_max=nnz,
+        bias=bias, block_n=8, block_c=64, block_d=32,
+        use_pallas=True, interpret=True)
+    assert seen and all(blk == (8, 64, 32) for blk in seen)
+    lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y, b,
+                                     bias=bias)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -161,10 +387,9 @@ def test_model_loss_fused_flag_routes_to_kernel(monkeypatch):
     calls = {"n": 0}
     orig = ops_mod.mach_fused_xent_pallas
 
-    def spy(h2, w, lbl, nb, bn, bc, interpret):
+    def spy(h2, w, bias, lbl, nb, bn, bc, bd, interpret):
         calls["n"] += 1
-        return orig(h2, w, lbl, nb, bn, bc, True)   # interpret on CPU
-
+        return orig(h2, w, bias, lbl, nb, bn, bc, bd, True)  # interpret
     m1 = LanguageModel(dataclasses.replace(cfg, mach_fused_loss=True))
     with monkeypatch.context() as mp:
         mp.setattr(ops_mod, "_on_tpu", lambda: True)
@@ -179,7 +404,7 @@ def test_model_loss_fused_flag_routes_to_kernel(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# the structural claim: no (N, R·B) tensor in either pass
+# structural claims: no (N, R·B) tensor, no (d+1, R·B) bias concat
 # ---------------------------------------------------------------------------
 
 def test_no_nrb_tensor_in_fused_jaxpr():
@@ -187,26 +412,62 @@ def test_no_nrb_tensor_in_fused_jaxpr():
     # benchmarks package is importable alongside src/)
     from benchmarks.common import intermediate_avals
 
-    n, d, r, b = 64, 32, 8, 128
-    h, w, y, g = _case(n, d, r, b)
+    # N > dp (the padded feature dim) so batch-carrying and
+    # parameter-shaped intermediates are distinguishable by leading dim
+    n, d, r, b = 256, 32, 8, 128
+    h, w, bias, y, g = _case(n, d, r, b, with_bias=True)
 
-    def fused_vag(h_, w_):
-        return jax.value_and_grad(lambda hh, ww: jnp.sum(
-            mach_fused_xent_pallas(hh, ww, y, b, None, None, True) * g),
-            argnums=(0, 1))(h_, w_)
+    def fused_vag(h_, w_, b_):
+        return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+            mach_fused_xent_pallas(hh, ww, bb, y, b, None, None, None,
+                                   True) * g),
+            argnums=(0, 1, 2))(h_, w_, b_)
 
-    def mat_vag(h_, w_):
-        return jax.value_and_grad(lambda hh, ww: jnp.sum(
-            ref.mach_fused_xent_ref(hh, ww, y, b) * g),
-            argnums=(0, 1))(h_, w_)
+    def mat_vag(h_, w_, b_):
+        return jax.value_and_grad(lambda hh, ww, bb: jnp.sum(
+            ref.mach_fused_xent_ref(hh, ww, y, b, bias=bb) * g),
+            argnums=(0, 1, 2))(h_, w_, b_)
 
     nrb = n * r * b
-    fused_sizes = [a.size for a in intermediate_avals(
-        jax.make_jaxpr(fused_vag)(h, w).jaxpr) if hasattr(a, "size")]
-    mat_sizes = [a.size for a in intermediate_avals(
-        jax.make_jaxpr(mat_vag)(h, w).jaxpr) if hasattr(a, "size")]
+
+    def batch_sizes(fn):
+        return [a.size for a in intermediate_avals(
+            jax.make_jaxpr(fn)(h, w, bias).jaxpr)
+            if getattr(a, "ndim", 0) >= 1 and a.size
+            and n <= a.shape[0] < n + 128]
+
+    fused_sizes = batch_sizes(fused_vag)
+    mat_sizes = batch_sizes(mat_vag)
     # the materializing path forms (N, R·B) twice (fwd + bwd)...
     assert any(s >= nrb for s in mat_sizes)
     # ...the fused path never does, in either pass
     assert all(s < nrb for s in fused_sizes), \
         sorted(fused_sizes, reverse=True)[:5]
+
+
+def test_dense_fused_loss_has_no_bias_concat():
+    """MACHLinear.fused_loss on dense inputs no longer folds the bias
+    by concatenating a row onto W: no (d+1, R·B)-shaped intermediate
+    (nor its concat cotangent) in either pass — the bias is an
+    in-kernel operand."""
+    from benchmarks.common import intermediate_avals
+    from repro.core.mach import MACHLinear
+
+    cfg = MACHConfig(300, 8, 5)
+    dim = 24
+    m = MACHLinear(cfg, dim, fused=True)
+    params = m.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (10, dim))
+    y = jax.random.randint(jax.random.key(2), (10,), 0, 300)
+
+    def vag(p):
+        return jax.value_and_grad(
+            lambda q: m.fused_loss(q, x, y, use_pallas=True,
+                                   interpret=True))(p)
+
+    avals = intermediate_avals(jax.make_jaxpr(vag)(params).jaxpr)
+    rb = cfg.num_repetitions * cfg.num_buckets
+    concat_shapes = [a.shape for a in avals
+                     if getattr(a, "ndim", 0) == 2
+                     and a.shape[0] == dim + 1 and a.shape[1] >= rb]
+    assert not concat_shapes, concat_shapes

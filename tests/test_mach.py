@@ -131,6 +131,18 @@ def test_from_delta_constructor():
     assert cfg.num_repetitions >= 2
 
 
+def test_config_validates_hash_kind_at_construction():
+    """hash_kind typos used to construct fine and only blow up later
+    inside make_hash_family (e.g. "multshift" for "mult_shift") —
+    __post_init__ must reject them like it rejects bad estimators."""
+    for kind in ("auto", "carter_wegman", "mult_shift"):
+        MACHConfig(100, 8, 4, hash_kind=kind)
+    with pytest.raises(ValueError, match="hash_kind"):
+        MACHConfig(100, 8, 4, hash_kind="multshift")
+    with pytest.raises(ValueError, match="hash_kind"):
+        MACHConfig(100, 8, 4, hash_kind="")
+
+
 def test_oaa_loss_all_zero_weights_no_nan():
     """The maximum(sum, 1.0) guard: an all-padding batch must yield a
     finite zero loss and finite (zero) grads, not NaN."""

@@ -50,7 +50,7 @@ def test_sparse_xent_matches_ref(n, d, r, b, nnz, dtype):
                                                  dtype=dtype)
     cols, vals = ops.csr_to_ell(indptr, indices, values, nnz, d)
     lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y, b)
-    lk = mach_fused_xent_sparse_pallas(cols, vals, w, y, b,
+    lk = mach_fused_xent_sparse_pallas(cols, vals, w, None, y, b,
                                        None, None, None, True)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
                                rtol=1e-5, atol=1e-5)
@@ -58,7 +58,7 @@ def test_sparse_xent_matches_ref(n, d, r, b, nnz, dtype):
         ref.mach_fused_xent_csr_ref(indptr, indices, values, w_, y, b)
         * g))(w)
     dk = jax.grad(lambda w_: jnp.sum(
-        mach_fused_xent_sparse_pallas(cols, vals, w_, y, b,
+        mach_fused_xent_sparse_pallas(cols, vals, w_, None, y, b,
                                       None, None, None, True) * g))(w)
     assert dr.dtype == dk.dtype
     # bf16 grads agree to 1 ulp (the final f32->bf16 cast may round a
@@ -81,7 +81,7 @@ def test_sparse_xent_d_blocked_and_head_split():
     assert bc < b and bd < d                 # the paths under test
     cols, vals = ops.csr_to_ell(indptr, indices, values, nnz, d)
     lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y, b)
-    lk = mach_fused_xent_sparse_pallas(cols, vals, w, y, b,
+    lk = mach_fused_xent_sparse_pallas(cols, vals, w, None, y, b,
                                        None, 64, 64, True)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
                                rtol=1e-5, atol=1e-5)
@@ -89,15 +89,16 @@ def test_sparse_xent_d_blocked_and_head_split():
         ref.mach_fused_xent_csr_ref(indptr, indices, values, w_, y, b)
         * g))(w)
     dk = jax.grad(lambda w_: jnp.sum(
-        mach_fused_xent_sparse_pallas(cols, vals, w_, y, b,
+        mach_fused_xent_sparse_pallas(cols, vals, w_, None, y, b,
                                       None, 64, 64, True) * g))(w)
     np.testing.assert_allclose(np.asarray(dr), np.asarray(dk),
                                rtol=1e-4, atol=1e-6)
 
 
 def test_csr_op_with_bias_matches_ref():
-    """ops-level dispatch: bias folded in as a unit feature; dW and
-    dbias both flow through the fused scatter-add."""
+    """ops-level dispatch: bias as a native in-kernel operand; dW flows
+    through the fused scatter-add, dbias through the (1, bc) scratch
+    reduction."""
     from benchmarks.common import make_csr_case
     n, d, r, b, nnz = 11, 96, 5, 32, 8
     indptr, indices, values, w, bias, y, g = make_csr_case(n, d, r, b,
@@ -119,6 +120,32 @@ def test_csr_op_with_bias_matches_ref():
     for a, k in zip(dr, dk):
         np.testing.assert_allclose(np.asarray(a), np.asarray(k),
                                    rtol=1e-4, atol=1e-6)
+
+
+def test_csr_bias_keeps_ell_width_nnz_max():
+    """The bias used to ride an always-on unit feature, widening the
+    ELL layout to nnz_max+1 (a full extra lane block whenever nnz_max
+    was a multiple of 128).  With the in-kernel bias operand the ELL
+    width is exactly nnz_max again: the traced fwd+bwd contains
+    (N, nnz_max) intermediates and none of width nnz_max+1."""
+    from benchmarks.common import intermediate_avals, make_csr_case
+
+    n, d, r, b, nnz = 16, 96, 4, 32, 128    # nnz on a lane multiple
+    indptr, indices, values, w, bias, y, g = make_csr_case(n, d, r, b,
+                                                           nnz)
+
+    def vag(w_, bias_):
+        return jax.value_and_grad(lambda ww, bb: jnp.sum(
+            ops.mach_fused_xent_csr(indptr, indices, values, ww, y,
+                                    num_buckets=b, nnz_max=nnz, bias=bb,
+                                    use_pallas=True, interpret=True)
+            * g), argnums=(0, 1))(w_, bias_)
+
+    widths = {a.shape[1] for a in
+              intermediate_avals(jax.make_jaxpr(vag)(w, bias).jaxpr)
+              if getattr(a, "ndim", 0) == 2 and a.shape[0] == n}
+    assert nnz in widths, sorted(widths)
+    assert nnz + 1 not in widths, sorted(widths)
 
 
 def test_csr_to_ell_roundtrip():
@@ -219,6 +246,41 @@ def test_slice_merge_roundtrip_through_fused_step():
          for j in range(cfg.num_repetitions)])
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ragged_zipf_csr_end_to_end_training():
+    """Real ragged rows (Zipf doc lengths, not handmade fixtures) flow
+    through the fused CSR path end to end: the dataset emits rows of
+    varying nnz, the fused interpret-mode loss/grads match the
+    materializing dense path on the same batch, and a full adamw step
+    goes through."""
+    ds = SparseExtremeDataset(SparseExtremeDataConfig(
+        num_classes=64, num_features=48, nnz=8, sig_features=3,
+        length_zipf_a=1.0))
+    cfg = MACHConfig(64, 8, 4)
+    m0, m1 = MACHLinear(cfg, 48), MACHLinear(cfg, 48, fused=True)
+    params = m0.init(jax.random.key(0))
+    sb, y = ds.batch_at(0, 16)
+    lens = np.diff(np.asarray(sb.indptr))
+    assert lens.min() >= 3 and lens.max() <= 8   # sig_features..nnz
+    assert len(set(lens.tolist())) > 1           # actually ragged
+    assert sb.nnz_max == 8
+    xd, yd = ds.batch_at(0, 16, format="dense")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yd))
+    l0, g0 = jax.value_and_grad(m0.loss)(params, xd, y)
+    l1, g1 = jax.value_and_grad(
+        lambda p: m1.fused_loss(p, sb, y, use_pallas=True,
+                                interpret=True))(params)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5, atol=1e-5)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                   rtol=1e-4, atol=1e-6)
+    opt = adamw(0.05)
+    state = opt.init(params)
+    upd, state = opt.update(g1, state, params)
+    params = apply_updates(params, upd)
+    loss2 = m1.fused_loss(params, sb, y, use_pallas=True, interpret=True)
+    assert np.isfinite(float(loss2))
 
 
 # ---------------------------------------------------------------------------
