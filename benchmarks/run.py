@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
   bench_sparse_xent fused CSR projection+CE vs densified reference —
                     the ODP sparse-feature path (also writes
                     BENCH_sparse.json)
+  bench_serve       continuous (slot) vs lockstep serving scheduler on
+                    a Zipf ragged workload (also writes
+                    BENCH_serve.json)
   roofline          §Roofline aggregation from the dry-run artifacts
 """
 
@@ -33,7 +36,7 @@ def main() -> int:
                     help="subset of benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (bench_decode_topk, bench_kernels,
+    from benchmarks import (bench_decode_topk, bench_kernels, bench_serve,
                             bench_sparse_xent, bench_train_xent,
                             fig1_tradeoff, roofline, table2_resources,
                             table3_estimators)
@@ -44,6 +47,7 @@ def main() -> int:
         "bench_decode_topk": bench_decode_topk,
         "bench_train_xent": bench_train_xent,
         "bench_sparse_xent": bench_sparse_xent,
+        "bench_serve": bench_serve,
         "roofline": roofline,
         "fig1_tradeoff": fig1_tradeoff,
     }

@@ -1,10 +1,13 @@
-"""Serve a small LM with batched requests and fused MACH decode.
+"""Serve a small LM with continuous batching and fused MACH decode.
 
 Builds a reduced recurrentgemma-family model (extreme 256-class-per-
 bucket vocab head would be silly at toy scale, so V=4096, B=256, R=6),
-queues a handful of prompts of different lengths, and serves them with
-the batching engine: left-padded lockstep prefill + per-token decode
-through the paper's summed-score rule.
+submits typed ``Request``s of very different lengths, and serves them
+with the slot engine: per-request prefill scattered into a fixed
+4-slot decode pool, every step advancing all live slots through the
+paper's never-materialize top-k kernel.  Short requests free their slot
+the moment they finish and queued requests are admitted into it — watch
+``metrics.occupancy`` stay high even though the workload is ragged.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -16,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.mach import MACHConfig
 from repro.models import LanguageModel, ModelConfig
-from repro.serving import ServeConfig, ServingEngine
+from repro.serving import Request, SamplingParams, ServeConfig, ServingEngine
 
 
 def main():
@@ -36,7 +39,7 @@ def main():
           f"(decode never materializes the (batch, V) logits)")
 
     engine = ServingEngine(model, params,
-                           ServeConfig(max_len=128, batch_size=4,
+                           ServeConfig(max_len=128, num_slots=4,
                                        max_new_tokens=16))
     prompts = [
         [12, 99, 1034, 7],
@@ -45,28 +48,39 @@ def main():
         [1, 2, 3],
         [400, 500],
     ]
-    for p in prompts:
-        engine.add_request(p)
+    # ragged per-request budgets: short ones free their slot early and
+    # the 5th prompt is admitted mid-decode (continuous batching)
+    budgets = [16, 4, 16, 6, 16]
+    for p, n in zip(prompts, budgets):
+        engine.submit(Request(prompt=p, max_new_tokens=n))
 
     t0 = time.perf_counter()
     outs = engine.run()
     dt = time.perf_counter() - t0
-    total_new = sum(len(o) for o in outs)
-    for p, o in zip(prompts, outs):
-        print(f"prompt {p} -> {o}")
-    print(f"\n{len(prompts)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new/dt:.1f} tok/s on CPU, greedy, batch=4)")
+    for p, r in zip(prompts, outs):
+        print(f"prompt {p} -> {list(r.tokens)} ({r.finish_reason}, "
+              f"{r.latency_steps} ticks)")
+    m = engine.metrics
+    print(f"\n{len(prompts)} requests, {m.tokens_generated} tokens in "
+          f"{dt:.1f}s ({m.tokens_generated/dt:.1f} tok/s on CPU, greedy, "
+          f"{m.decode_steps} decode steps over 4 slots, "
+          f"occupancy {m.occupancy:.2f})")
 
-    # sampled decoding: per-request temperature/top-k, still on the
-    # fused streaming top-k path (no (batch, V) tensor anywhere)
+    # sampled decoding: per-request temperature/top-k/seed, still on the
+    # fused streaming top-k path (no (batch, V) tensor anywhere) — an
+    # explicit seed makes a request's continuation independent of its
+    # batch neighbours and slot placement
     sampler = ServingEngine(model, params,
-                            ServeConfig(max_len=128, batch_size=4,
+                            ServeConfig(max_len=128, num_slots=4,
                                         max_new_tokens=16, top_k=16,
                                         seed=0))
     for i, p in enumerate(prompts[:4]):
-        sampler.add_request(p, {"temperature": 0.7 + 0.1 * i, "top_k": 8})
-    for p, o in zip(prompts, sampler.run()):
-        print(f"sampled {p} -> {o}")
+        sampler.submit(Request(
+            prompt=p,
+            sampling=SamplingParams(temperature=0.7 + 0.1 * i, top_k=8,
+                                    seed=100 + i)))
+    for p, r in zip(prompts, sampler.run()):
+        print(f"sampled {p} -> {list(r.tokens)}")
 
 
 if __name__ == "__main__":

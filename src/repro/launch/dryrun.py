@@ -25,7 +25,7 @@ from repro.launch import hlo_analysis
 from repro.launch import mesh as mesh_lib
 from repro.models.model import LanguageModel
 from repro.models.frontends import AUDIO_FEATURE_DIM, VISION_FEATURE_DIM
-from repro.serving.engine import make_decode_fn, make_prefill_fn
+from repro.serving.engine import make_serve_step_fn
 from repro.sharding import partitioning as part
 from repro.train.trainer import TrainConfig, make_train_step
 from repro.train.train_state import new_train_state
@@ -344,13 +344,34 @@ def _serve_param_shapes(model, cfg, mesh, rules):
     return params_shapes, p_shard
 
 
+def _greedy_serve_operands(model, b: int):
+    """Greedy per-row operands for the unified serve step (ε-temperature
+    over each row's top-1 candidate — the serving engine's greedy
+    path)."""
+    est = (model.cfg.mach.estimator if model.cfg.mach is not None
+           else "unbiased")
+    zeros = jnp.zeros((b,), jnp.int32)
+    return (jax.random.key(0), zeros, zeros,
+            jnp.full((b,), 1e-6, jnp.float32),
+            jnp.ones((b,), jnp.int32), zeros, est)
+
+
 def _lower_prefill(model, cfg, mesh, rules, spec):
     params_shapes, p_shard = _serve_param_shapes(model, cfg, mesh, rules)
     batch_specs = prefill_batch_specs(cfg, spec["seq_len"],
                                       spec["global_batch"])
     batch_shard = part.batch_shardings(mesh, rules, batch_specs)
-    prefill = make_prefill_fn(model)
-    fn = lambda p, b: prefill(p, b, max_len=spec["seq_len"] + 64)
+    serve_step = make_serve_step_fn(model, top_k=8)
+
+    def fn(p, b):
+        gb = b["tokens"].shape[0]
+        key, salts, tok_idx, temps, row_k, est_sel, est = \
+            _greedy_serve_operands(model, gb)
+        return serve_step(p, None, None, b, jnp.zeros((gb,), jnp.int32),
+                          key, salts, tok_idx, temps, row_k, est_sel,
+                          estimators=(est,),
+                          max_len=spec["seq_len"] + 64)
+
     out_shapes = jax.eval_shape(fn, params_shapes, batch_specs)
     ids_shard = part.batch_shardings(mesh, rules, out_shapes[2])
     # caches / enc_kvs out-shardings stay UNSPECIFIED: XLA places the
@@ -377,11 +398,24 @@ def _lower_decode(model, cfg, mesh, rules, spec):
     tok_specs = _sds((gb,), jnp.int32)
     pos_specs = _sds((gb,), jnp.int32)
     tok_shard = part.batch_shardings(mesh, rules, tok_specs)
-    decode = make_decode_fn(model)
+    serve_step = make_serve_step_fn(model, top_k=8)
+
+    def decode(p, caches, enc_kvs, tokens, pos):
+        key, salts, tok_idx, temps, row_k, est_sel, est = \
+            _greedy_serve_operands(model, tokens.shape[0])
+        caches, _, ids = serve_step(p, caches, enc_kvs,
+                                    {"tokens": tokens[:, None]}, pos,
+                                    key, salts, tok_idx, temps, row_k,
+                                    est_sel, estimators=(est,), max_len=s)
+        return caches, ids
+
     ids_shard = part.batch_shardings(mesh, rules, tok_specs)
     # cache/enc_kv shardings UNSPECIFIED (XLA GSPMD places loop state —
     # see _lower_prefill) + donated: the output cache aliases the input,
-    # matching the steady-state serving loop.
+    # matching the steady-state serving loop.  NOTE: the unified step
+    # decodes per-slot (each row's KV write at its own index — a vmapped
+    # scatter), so slot pools should be sharded over replicas, not over
+    # the cache's sequence axis; see cache_update_decode.
     return jax.jit(decode,
                    in_shardings=(p_shard, None, None, tok_shard, tok_shard),
                    out_shardings=(None, ids_shard),

@@ -1,7 +1,7 @@
-"""Pod-scale serving driver — mesh-sharded batched inference.
+"""Pod-scale serving driver — mesh-sharded continuous-batching inference.
 
     PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
-        --local --requests 6 --max-new 12
+        --local --requests 6 --slots 4 --max-new 12 --scheduler continuous
 """
 
 from __future__ import annotations
@@ -16,7 +16,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.frontends import AUDIO_FEATURE_DIM, VISION_FEATURE_DIM
 from repro.models.model import LanguageModel
-from repro.serving import ServeConfig, ServingEngine
+from repro.serving import Request, SamplingParams, ServeConfig, ServingEngine
+from repro.serving.engine import SCHEDULERS
 from repro.sharding import partitioning as part
 
 
@@ -27,8 +28,24 @@ def main() -> int:
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--local", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
+    # scheduler knobs (ServeConfig)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-pool width (concurrent requests)")
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="per-slot cache capacity")
+    ap.add_argument("--max-new", type=int, default=12,
+                    help="default per-request max_new_tokens")
+    ap.add_argument("--scheduler", choices=SCHEDULERS, default="continuous")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="EOS token id (-1: never stop early)")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="engine-wide sampling default (None: greedy)")
+    ap.add_argument("--top-k", type=int, default=50,
+                    help="fused-kernel candidate cap")
+    ap.add_argument("--estimator", choices=("unbiased", "min", "median"),
+                    default=None,
+                    help="per-request MACH estimator override")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -44,29 +61,40 @@ def main() -> int:
         params = jax.device_put(params, p_shard)
 
         engine = ServingEngine(model, params,
-                               ServeConfig(max_len=64,
-                                           batch_size=args.batch,
-                                           max_new_tokens=args.max_new))
+                               ServeConfig(max_len=args.max_len,
+                                           num_slots=args.slots,
+                                           max_new_tokens=args.max_new,
+                                           eos_id=args.eos,
+                                           temperature=args.temperature,
+                                           top_k=args.top_k,
+                                           seed=args.seed,
+                                           scheduler=args.scheduler))
         rng = np.random.default_rng(0)
-        extras = {}
+        feats = {}
         if cfg.num_encoder_layers:
-            extras["enc_feats"] = rng.standard_normal(
+            feats["enc_feats"] = rng.standard_normal(
                 (8, AUDIO_FEATURE_DIM)).astype(np.float32)
         if cfg.frontend == "vision":
-            extras["prefix_feats"] = rng.standard_normal(
+            feats["prefix_feats"] = rng.standard_normal(
                 (cfg.num_prefix_tokens, VISION_FEATURE_DIM)
             ).astype(np.float32)
+        sampling = SamplingParams(estimator=args.estimator)
         for i in range(args.requests):
             plen = int(rng.integers(2, 8))
-            engine.add_request(list(rng.integers(1, cfg.vocab_size, plen)),
-                               extras or None)
+            engine.submit(Request(
+                prompt=list(rng.integers(1, cfg.vocab_size, plen)),
+                sampling=sampling, **feats))
         t0 = time.perf_counter()
         outs = engine.run()
         dt = time.perf_counter() - t0
-        for i, o in enumerate(outs):
-            print(f"request {i}: {o}")
+        for r in outs:
+            print(f"request {r.request_id} ({r.finish_reason}, "
+                  f"{r.latency_steps} ticks): {list(r.tokens)}")
+        m = engine.metrics
         print(f"{len(outs)} requests, "
-              f"{sum(len(o) for o in outs)/dt:.1f} tok/s")
+              f"{m.tokens_generated/dt:.1f} tok/s, "
+              f"{m.decode_steps} decode steps, "
+              f"occupancy {m.occupancy:.2f}")
     return 0
 
 

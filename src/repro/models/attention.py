@@ -233,18 +233,37 @@ def cache_update_prefill(cache: KVCache, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def cache_update_decode(cache: KVCache, k1: jnp.ndarray, v1: jnp.ndarray,
-                        ring: bool) -> KVCache:
-    """Insert one token (B, 1, KV, hd) — *lockstep* decode: every row
-    writes at the same position (the serving engine left-pads prompts so
-    batches decode in lockstep).
+                        ring: bool, per_row: bool = False) -> KVCache:
+    """Insert one token (B, 1, KV, hd).
 
+    ``per_row=False`` — *lockstep* decode: every row writes at the same
+    position (rows were left-padded so the batch decodes in lockstep).
     A single scalar-indexed dynamic_update_slice keeps the update local
     under SPMD.  (A per-row vmapped scatter here makes XLA all-gather
     the entire batch-sharded cache — 11.8 GB/token on the decode_32k
-    cell — which is why this isn't expressed per-row.)
+    cell — which is why the lockstep path isn't expressed per-row.)
+
+    ``per_row=True`` — *slot* decode for the continuous-batching engine:
+    row i writes at its own ``index[i]`` (mod capacity for ring caches),
+    so requests at different depths share one fixed cache pool.  This is
+    the vmapped scatter the lockstep comment warns about; the slot
+    engine trades that SPMD hazard for scheduling freedom — shard slot
+    pools over replicas (batch axis untouched per row), not over the
+    cache's sequence axis.
     """
-    idx = cache.index            # (B,), uniform values in lockstep decode
-    pos = idx[0]                 # scalar write position
+    idx = cache.index            # (B,)
+    if per_row:
+        slot = jnp.mod(idx, cache.capacity) if ring else idx
+
+        def put_row(buf, new, s):
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, s, axis=0)
+
+        newk = jax.vmap(put_row)(cache.k, k1.astype(cache.k.dtype), slot)
+        newv = jax.vmap(put_row)(cache.v, v1.astype(cache.v.dtype), slot)
+        newp = jax.vmap(put_row)(cache.positions,
+                                 idx[:, None].astype(jnp.int32), slot)
+        return KVCache(newk, newv, newp, idx + 1)
+    pos = idx[0]                 # scalar write position, uniform in lockstep
     slot = jnp.mod(pos, cache.capacity) if ring else pos
     zero = jnp.zeros((), slot.dtype)
     newk = jax.lax.dynamic_update_slice(

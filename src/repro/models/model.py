@@ -111,7 +111,7 @@ class LanguageModel:
                       prefix_emb: Optional[jnp.ndarray] = None,
                       enc_kvs=None, caches=None,
                       positions: Optional[jnp.ndarray] = None,
-                      decode: bool = False):
+                      decode: bool = False, per_slot: bool = False):
         """tokens (B, T) -> hidden (B, T(+P), d).  Returns (h, caches, aux)."""
         cfg = self.cfg
         x = self._embed_tokens(params, tokens)
@@ -124,7 +124,8 @@ class LanguageModel:
             positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
                                          (b, t))
         x, caches, aux = apply_stacks(params["stacks"], cfg, self._dec_layout(),
-                                      x, positions, caches, enc_kvs, decode)
+                                      x, positions, caches, enc_kvs, decode,
+                                      per_slot)
         x = layers.apply_norm(params["final_norm"], x, cfg.norm)
         return x, caches, aux
 
@@ -232,13 +233,36 @@ class LanguageModel:
         return caches, enc_kvs, h[:, -1]
 
     def decode_step(self, params, caches, enc_kvs, tokens: jnp.ndarray,
-                    pos: jnp.ndarray):
+                    pos: jnp.ndarray, per_slot: bool = False):
         """One token step.  tokens (B,), pos (B,) absolute positions.
-        Returns (caches, hidden (B, d))."""
+        Returns (caches, hidden (B, d)).
+
+        ``per_slot=True`` writes each row's KV at its own cache index
+        (continuous batching: rows are independent slots at different
+        depths); the default writes all rows at the lockstep position."""
         h, caches, _ = self.hidden_states(
             params, tokens[:, None], enc_kvs=enc_kvs, caches=caches,
-            positions=pos[:, None], decode=True)
+            positions=pos[:, None], decode=True, per_slot=per_slot)
         return caches, h[:, 0]
+
+    # ----------------------------------------------------- slot-pool caches
+    @staticmethod
+    def insert_cache_slot(pool, one, slot):
+        """Scatter a batch-1 cache/enc_kvs pytree into row ``slot`` of a
+        pooled pytree (batch axis 1 on every leaf — the (n_layers, B, ...)
+        stacking).  Used by the serving engine to admit a freshly
+        prefilled request into a free slot of the fixed decode pool."""
+        def put(p, o):
+            return jax.lax.dynamic_update_index_in_dim(p, o[:, 0], slot,
+                                                       axis=1)
+        return jax.tree.map(put, pool, one)
+
+    def reset_cache_slot(self, pool, slot, max_len: int):
+        """Return ``pool`` with row ``slot`` restored to the freshly
+        initialized state (empty positions, zero indices/recurrent
+        state) so a freed slot carries nothing across requests."""
+        return self.insert_cache_slot(pool, self.init_caches(1, max_len),
+                                      slot)
 
     def next_token(self, params, hidden: jnp.ndarray):
         """Greedy next token from final hidden states (B, d).
@@ -291,26 +315,18 @@ class LanguageModel:
         return ops.mach_topk(probs, cfg.mach.table(),
                              num_classes=cfg.vocab_size, k=k, estimator=est)
 
-    def sample_token(self, params, hidden: jnp.ndarray, key: jax.Array,
-                     *, temperature=1.0, top_k: int = 50,
-                     row_top_k: Optional[jnp.ndarray] = None,
-                     estimator: Optional[str] = None):
-        """Top-k temperature sampling from final hidden states (B, d).
+    def topk_candidates(self, params, hidden: jnp.ndarray, top_k: int,
+                        estimator: Optional[str] = None):
+        """Top-k sampling candidates (vals, idxs), each (B, top_k), on
+        the *sampling* scale.
 
-        MACH path: candidates come from the fused streaming top-k over
-        the configured estimator (Eq. 2/7/8) — no (B, V) tensor exists
-        anywhere on this path.  For the unbiased estimator the sampling
-        logits are rescaled back to the summed-score scale (Eq. 2's
-        affine map would otherwise multiply the effective temperature by
-        ~R), preserving the historical softmax(Σ_r scores / T)
-        semantics exactly; min/median sample on their own scale.
-
-        ``temperature`` may be a scalar or a per-row (B,) array;
-        ``row_top_k`` (optional (B,) int) restricts each row to its own
-        k_i <= top_k candidates (serving: per-request knobs inside one
-        fused batched call).  Values are clamped to [1, top_k]: a row
-        with k_i <= 0 would mask every candidate to -inf and make
-        ``jax.random.categorical`` return an undefined index."""
+        MACH path: the fused streaming top-k over the requested
+        estimator (Eq. 2/7/8) — no (B, V) tensor exists anywhere on this
+        path.  For the unbiased estimator the values are rescaled back
+        to the summed-score scale (Eq. 2's affine map would otherwise
+        multiply the effective temperature by ~R), preserving the
+        historical softmax(Σ_r scores / T) semantics exactly; min/median
+        sample on their own scale."""
         cfg = self.cfg
         vals, idxs = self.topk_scores(params, hidden, top_k,
                                       estimator)                # (B, k)
@@ -321,6 +337,29 @@ class LanguageModel:
                 # inverse of Eq. 2's affine map up to a per-row constant
                 # (which cancels in the categorical)
                 vals = vals * (r * (b - 1.0) / b)
+        return vals, idxs
+
+    @staticmethod
+    def sample_from_candidates(vals, idxs, key, *, temperature=1.0,
+                               row_top_k: Optional[jnp.ndarray] = None,
+                               per_row_keys: bool = False):
+        """Temperature/top-k categorical pick over (B, k) candidates.
+
+        ``temperature`` may be a scalar or a per-row (B,) array;
+        ``row_top_k`` (optional (B,) int) restricts each row to its own
+        k_i <= top_k candidates (serving: per-request knobs inside one
+        fused batched call).  Values are clamped to [1, top_k]: a row
+        with k_i <= 0 would mask every candidate to -inf and make
+        ``jax.random.categorical`` return an undefined index.
+
+        ``per_row_keys=True`` takes ``key`` as a (B,) key array and
+        draws each row from its own stream — the serving engine keys
+        rows by (request id, token index) so a request's samples don't
+        depend on which slot it lands in or who its batch neighbours
+        are.  A row at temperature ~0 with row_top_k 1 is fully
+        deterministic (its single unmasked candidate wins regardless of
+        the Gumbel draw), which is what makes free/greedy slots inert."""
+        top_k = vals.shape[-1]
         temp = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
         if temp.ndim:
             temp = temp[:, None]
@@ -330,9 +369,24 @@ class LanguageModel:
             rank = jnp.arange(top_k, dtype=jnp.int32)[None]     # (1, k)
             logits_k = jnp.where(rank < row_k[:, None], logits_k,
                                  -jnp.inf)
-        gk = jax.random.categorical(key, logits_k)
+        if per_row_keys:
+            gk = jax.vmap(jax.random.categorical)(key, logits_k)
+        else:
+            gk = jax.random.categorical(key, logits_k)
         picked = jnp.take_along_axis(idxs, gk[:, None], axis=-1)[:, 0]
         return picked.astype(jnp.int32)
+
+    def sample_token(self, params, hidden: jnp.ndarray, key: jax.Array,
+                     *, temperature=1.0, top_k: int = 50,
+                     row_top_k: Optional[jnp.ndarray] = None,
+                     estimator: Optional[str] = None):
+        """Top-k temperature sampling from final hidden states (B, d):
+        ``topk_candidates`` (fused streaming top-k on the MACH path)
+        followed by ``sample_from_candidates``."""
+        vals, idxs = self.topk_candidates(params, hidden, top_k, estimator)
+        return self.sample_from_candidates(vals, idxs, key,
+                                           temperature=temperature,
+                                           row_top_k=row_top_k)
 
 
 def _init_kind_cache(cfg: ModelConfig, kind: str, n: int, batch: int,
@@ -363,6 +417,9 @@ def _init_kind_cache(cfg: ModelConfig, kind: str, n: int, batch: int,
         )
     if kind == "slstm":
         hds = cfg.d_model // cfg.num_heads
-        z = jnp.zeros((n, batch, cfg.num_heads, hds), jnp.float32)
-        return xlstm.SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 1e30)
+        def z():
+            # distinct buffers per field: donated cache pools reject
+            # pytrees whose leaves alias one array
+            return jnp.zeros((n, batch, cfg.num_heads, hds), jnp.float32)
+        return xlstm.SLSTMState(c=z(), n=z() + 1e-6, h=z(), m=z() - 1e30)
     raise ValueError(kind)

@@ -185,7 +185,7 @@ def init_block(key, cfg: ModelConfig, kind: str):
 
 
 def _self_attention(params, cfg: ModelConfig, x, positions, window,
-                    cache, causal=True):
+                    cache, causal=True, per_slot=False):
     """Returns (attn_out, new_cache)."""
     q = layers.dense(params["q"], x)
     k = layers.dense(params["k"], x)
@@ -206,7 +206,8 @@ def _self_attention(params, cfg: ModelConfig, x, positions, window,
                               chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
     else:                                     # single-token decode
         ring = window is not None and cache.capacity <= window
-        new_cache = attn_lib.cache_update_decode(cache, k, v, ring)
+        new_cache = attn_lib.cache_update_decode(cache, k, v, ring,
+                                                 per_row=per_slot)
         out = attn_lib.decode_attend(q, new_cache, window=window)
     o = params["o"]["kernel"].astype(out.dtype)
     return jax.lax.dot_general(out, o, (((2, 3), (0, 1)), ((), ()))), new_cache
@@ -235,7 +236,8 @@ def cross_kv(params_block, x_enc):
 
 
 def apply_block(params, cfg: ModelConfig, kind: str, x, positions,
-                cache=None, enc_kv=None, decode: bool = False):
+                cache=None, enc_kv=None, decode: bool = False,
+                per_slot: bool = False):
     """Pre-norm residual block.  Returns (x, new_cache, aux)."""
     aux = {}
     h = layers.apply_norm(params["norm1"], x, cfg.norm)
@@ -243,7 +245,8 @@ def apply_block(params, cfg: ModelConfig, kind: str, x, positions,
     if kind in ("attn", "attn_local", "moe", "enc", "xattn"):
         out, new_cache = _self_attention(params["attn"], cfg, h, positions,
                                          window, cache,
-                                         causal=(kind != "enc"))
+                                         causal=(kind != "enc"),
+                                         per_slot=per_slot)
         x = x + out
         if kind == "xattn":
             hx = layers.apply_norm(params["norm_x"], x, cfg.norm)
@@ -324,7 +327,8 @@ def init_stacks(key, cfg: ModelConfig, layout: list):
 
 
 def apply_stacks(params, cfg: ModelConfig, layout: list, x, positions,
-                 caches=None, enc_kvs=None, decode: bool = False):
+                 caches=None, enc_kvs=None, decode: bool = False,
+                 per_slot: bool = False):
     """Run all stacks.  caches/enc_kvs mirror the params nesting.
     Returns (x, new_caches, aux_sums)."""
     stacks = plan_stacks(layout)
@@ -344,7 +348,7 @@ def apply_stacks(params, cfg: ModelConfig, layout: list, x, positions,
                 c = layer_caches[pi] if layer_caches is not None else None
                 ek = layer_enc[pi] if layer_enc is not None else None
                 x, nc, aux = apply_block(layer_params[pi], cfg, kind, x,
-                                         positions, c, ek, decode)
+                                         positions, c, ek, decode, per_slot)
                 # residual-stream sharding (DP on batch; + SP over 'model'
                 # on seq when the active rules enable it) — no-op outside
                 # an activate() context

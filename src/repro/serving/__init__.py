@@ -1,7 +1,7 @@
-from repro.serving.engine import (ServeConfig, ServingEngine, make_decode_fn,
-                                  make_prefill_fn, make_sample_decode_fn,
-                                  make_sample_prefill_fn)
+from repro.serving.engine import (GREEDY, EngineMetrics, GenerationResult,
+                                  Request, SamplingParams, ServeConfig,
+                                  ServingEngine, make_serve_step_fn)
 
-__all__ = ["ServeConfig", "ServingEngine", "make_prefill_fn",
-           "make_decode_fn", "make_sample_prefill_fn",
-           "make_sample_decode_fn"]
+__all__ = ["GREEDY", "EngineMetrics", "GenerationResult", "Request",
+           "SamplingParams", "ServeConfig", "ServingEngine",
+           "make_serve_step_fn"]

@@ -1,91 +1,261 @@
-"""Serving engine: batched prefill/decode with MACH fused next-token.
+"""Continuous-batching serving engine: slot-scheduled MACH decode.
 
-Two layers:
+The public API is typed: callers build a ``Request`` (prompt, optional
+``SamplingParams``, per-request ``max_new_tokens``, optional frontend
+features, optional streaming ``on_token`` callback), ``submit()`` it,
+and drive the engine with ``step()`` (one scheduler tick) or ``run()``
+(drain everything); finished requests come back as
+``GenerationResult``s.
 
-* ``make_prefill_fn`` / ``make_decode_fn`` — the pure jit-compiled steps
-  (these are what launch/dryrun.py lowers for the ``prefill_*`` /
-  ``decode_*`` / ``long_*`` cells), plus the ``make_sample_*`` variants
-  that thread a PRNG key and per-row sampling knobs through.
-* ``ServingEngine`` — a host-side batcher: accepts requests, packs them
-  into fixed-size batches (padding short prompts), runs prefill once and
-  decode steps until max tokens.  Greedy decoding uses the paper's
-  summed-score rule via the fused top-1 kernel; sampling uses the fused
-  *streaming top-k* kernel (temperature / top-k / estimator per request)
-  — both stay on the never-materialize path.
+Scheduling is *continuous* (slot-based) batching: the KV cache is
+allocated once as a fixed pool of ``ServeConfig.num_slots`` slots.  A
+queued request is admitted by prefilling it alone (batch 1, exact
+prompt length — no padding, so a request's tokens are bit-identical to
+a solo decode) and scattering its caches into a free slot
+(``LanguageModel.insert_cache_slot``); every decode step then advances
+the whole pool with per-slot positions and per-row cache writes
+(``decode_step(per_slot=True)``).  EOS or the request's
+``max_new_tokens`` frees the slot immediately (``reset_cache_slot``)
+and the next queued request is admitted into it on the following tick —
+short requests never hold long ones hostage, and arriving requests
+never wait for a whole batch to drain.  ``ServeConfig.scheduler =
+"lockstep"`` keeps the old chunked policy (admit only into an empty
+pool, hold every slot until the whole chunk finishes) as an ablation
+baseline — ``benchmarks/bench_serve.py`` gates that continuous strictly
+beats it on ragged workloads.
 
-The MACH win at serve time is exactly the paper's O(RBd + KR) vs O(Kd):
-the head matmul shrinks by V/(R·B) and the class-score aggregation never
-materializes the (batch, V) logits tensor — for greedy *and* sampled
-decoding.
+One jitted serve step (``make_serve_step_fn``) covers every model call:
+prefill (``caches=None``) and decode (caches = the pool) both end in
+the fused streaming top-k kernel with per-row temperature / top-k /
+estimator — greedy is expressed as ε-temperature over the row's top-1
+candidate, so greedy and sampled rows share one trace instead of two
+disjoint jit caches, and neither ever materializes a (batch, V) logits
+tensor: the MACH win at serve time is exactly the paper's O(RBd + KR)
+vs O(Kd).
+
+Randomness is keyed per *request*, not per batch row: row i draws from
+``fold_in(fold_in(seed, request_id), token_index)``, so a request's
+sampled continuation is independent of its slot, its batch neighbours,
+and queue order, and free slots are inert (their ε-temperature top-1
+pick is deterministic regardless of the Gumbel draw).  Caveat: MoE
+blocks route tokens through shared expert-capacity groups, which
+couples rows — per-request bit-parity holds for the dense / recurrent /
+local-attention substrates.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import frontends
 from repro.models.model import LanguageModel
+
+_ESTIMATORS = ("unbiased", "min", "median")
+_GREEDY_TEMP = 1e-6            # ε-temperature: top-1 pick through the
+                               # fused streaming top-k kernel == argmax
+
+SCHEDULERS = ("continuous", "lockstep")
+
+
+def _prng_salt(seed: Optional[int], rid: int) -> int:
+    """Per-request PRNG identity, folded into the engine key.
+
+    Explicit ``SamplingParams.seed``s (odd salts) and engine-assigned
+    request ids (even salts) live in disjoint namespaces, so a seeded
+    request can never collide with an unseeded one's stream; the mask
+    keeps user-provided seeds in int32 range for ``fold_in``."""
+    if seed is not None:
+        return ((2 * seed) | 1) & 0x7FFFFFFF
+    return (2 * rid) & 0x7FFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Typed request/response surface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.
+
+    All-default means greedy (unless ``ServeConfig.temperature`` opts
+    the whole engine into sampling); setting *any* knob opts the request
+    into sampling — a ``top_k``-only request samples at temperature 1.0.
+    ``top_k`` is clamped to [1, ServeConfig.top_k] (the fused kernel's
+    static candidate cap; raise it there if requests need wider
+    support).  ``estimator`` picks the MACH score reduction (Eq. 2/7/8)
+    for this request — greedy requests follow it too (top-1 of that
+    estimator's scores).  ``seed`` pins the request's private random
+    stream: by default it is keyed by the engine-assigned request id
+    (deterministic for a fixed submission order); an explicit seed makes
+    the sampled continuation reproducible regardless of submission
+    order, batch neighbours, or which slot the scheduler picks."""
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    estimator: Optional[str] = None
+    seed: Optional[int] = None
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``on_token`` (optional) streams each generated token id as soon as
+    the scheduler tick that produced it completes — including the first
+    token, which comes out of the prefill itself."""
+    prompt: Sequence[int]
+    sampling: SamplingParams = GREEDY
+    max_new_tokens: Optional[int] = None     # None -> ServeConfig default
+    enc_feats: Optional[Any] = None          # (S, F) encoder frontend
+    prefix_feats: Optional[Any] = None       # (P, F) vision prefix
+    on_token: Optional[Callable[[int], None]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationResult:
+    request_id: int
+    tokens: tuple                 # generated ids (includes EOS if hit)
+    finish_reason: str            # "eos" | "length"
+    prompt_len: int
+    submit_step: int              # engine tick at submit()
+    finish_step: int              # engine tick that produced the last token
+
+    @property
+    def latency_steps(self) -> int:
+        """Scheduler ticks from submission to completion, inclusive."""
+        return self.finish_step - self.submit_step + 1
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Counters over the engine's lifetime (see also ``queue_depth``)."""
+    num_slots: int
+    decode_steps: int = 0         # pooled decode calls
+    prefills: int = 0             # admissions (one per request)
+    tokens_generated: int = 0     # real request tokens (free slots excluded)
+    completed: int = 0
+    live_slot_steps: int = 0      # Σ over decode calls of producing slots
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        denom = self.decode_steps * self.num_slots
+        return self.live_slot_steps / denom if denom else 0.0
+
+    @property
+    def tokens_per_decode_step(self) -> float:
+        return (self.tokens_generated / self.decode_steps
+                if self.decode_steps else 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    max_len: int = 2048
-    batch_size: int = 8
-    max_new_tokens: int = 64
-    eos_id: int = -1          # -1: never stop early
-    pad_id: int = 0
-    # sampling defaults: temperature None -> greedy unless a request
-    # asks for sampling via extras {"temperature": t, "top_k": k}
-    temperature: Optional[float] = None
-    top_k: int = 50           # fused-kernel candidate count (static cap)
+    max_len: int = 2048           # per-slot cache capacity
+    num_slots: int = 8            # fixed decode-pool width
+    max_new_tokens: int = 64      # default per-request cap
+    eos_id: int = -1              # -1: never stop early
+    temperature: Optional[float] = None   # engine-wide sampling default
+    top_k: int = 50               # fused-kernel candidate cap (static)
     seed: int = 0
+    scheduler: str = "continuous"  # "continuous" | "lockstep" (baseline)
 
 
-def make_prefill_fn(model: LanguageModel):
-    """(params, batch) -> (caches, enc_kvs, first generated token ids)."""
-    def prefill(params, batch, *, max_len: int):
-        caches, enc_kvs, h_last = model.prefill(params, batch, max_len)
-        ids, _ = model.next_token(params, h_last)
+# ---------------------------------------------------------------------------
+# The unified serve step
+# ---------------------------------------------------------------------------
+
+def make_serve_step_fn(model: LanguageModel, top_k: int):
+    """One jitted step for both phases of serving.
+
+    ``caches=None`` selects prefill: ``batch["tokens"]`` is the (1, L)
+    prompt (plus optional ``enc_feats`` / ``prefix_feats``), fresh
+    caches are built inside, and ``pos`` / incoming ``enc_kvs`` are
+    ignored.  Otherwise one pooled decode step: ``batch["tokens"]`` is
+    (S, 1), ``pos`` the per-slot absolute positions, and every row's KV
+    write lands at its own cache index.
+
+    Both phases end identically: per-estimator fused streaming top-k
+    candidates (``estimators`` is the static tuple of estimators live in
+    this batch; ``est_sel`` indexes into it per row), then a per-row
+    keyed temperature/top-k categorical.  A batch with E distinct live
+    estimators pays E fused top-k passes over the whole pool (the
+    kernel's reduction is specialized per estimator) — fine for the
+    common single-estimator case; a per-row estimator operand in the
+    kernel would remove the multiplier if mixed-estimator traffic ever
+    dominates.  Greedy rows ride the same
+    trace at ε-temperature over their top-1 candidate — no separate
+    greedy compilation, and no (batch, V) logits tensor in either mode.
+
+    Returns ``(caches, enc_kvs, ids)``."""
+
+    def serve_step(params, caches, enc_kvs, batch, pos, key, salts,
+                   tok_idx, temps, row_k, est_sel, *,
+                   estimators: tuple, max_len: int):
+        if caches is None:                       # ---- prefill (batch 1)
+            caches, enc_kvs, h = model.prefill(params, batch, max_len)
+        else:                                    # ---- pooled decode step
+            caches, h = model.decode_step(params, caches, enc_kvs,
+                                          batch["tokens"][:, 0], pos,
+                                          per_slot=True)
+        cands = [model.topk_candidates(params, h, top_k, est)
+                 for est in estimators]
+        if len(cands) == 1:
+            vals, idxs = cands[0]
+        else:
+            rows = jnp.arange(h.shape[0])
+            vals = jnp.stack([c[0] for c in cands])[est_sel, rows]
+            idxs = jnp.stack([c[1] for c in cands])[est_sel, rows]
+        row_keys = jax.vmap(
+            lambda r, t: jax.random.fold_in(jax.random.fold_in(key, r), t)
+        )(salts, tok_idx)
+        ids = model.sample_from_candidates(vals, idxs, row_keys,
+                                           temperature=temps,
+                                           row_top_k=row_k,
+                                           per_row_keys=True)
         return caches, enc_kvs, ids
-    return prefill
+
+    return serve_step
 
 
-def make_decode_fn(model: LanguageModel):
-    """(params, caches, enc_kvs, tokens, pos) -> (caches, next token ids)."""
-    def decode(params, caches, enc_kvs, tokens, pos):
-        caches, h = model.decode_step(params, caches, enc_kvs, tokens, pos)
-        ids, _ = model.next_token(params, h)
-        return caches, ids
-    return decode
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
 
-
-def make_sample_prefill_fn(model: LanguageModel, top_k: int):
-    """Sampling prefill: extra (key, temps (B,), row_k (B,)) operands.
-    Stays on the fused streaming top-k path — no (B, V) tensor."""
-    def prefill(params, batch, key, temps, row_k, *, max_len: int):
-        caches, enc_kvs, h_last = model.prefill(params, batch, max_len)
-        ids = model.sample_token(params, h_last, key, temperature=temps,
-                                 top_k=top_k, row_top_k=row_k)
-        return caches, enc_kvs, ids
-    return prefill
-
-
-def make_sample_decode_fn(model: LanguageModel, top_k: int):
-    """One sampled token step (per-row temperature / top-k)."""
-    def decode(params, caches, enc_kvs, tokens, pos, key, temps, row_k):
-        caches, h = model.decode_step(params, caches, enc_kvs, tokens, pos)
-        ids = model.sample_token(params, h, key, temperature=temps,
-                                 top_k=top_k, row_top_k=row_k)
-        return caches, ids
-    return decode
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one occupied decode slot."""
+    req_id: int
+    req: Request
+    salt: int                     # PRNG identity: sampling.seed or req_id
+    tokens: list                  # generated so far (first from prefill)
+    pos: int                      # next absolute position (= cache index)
+    temp: float
+    row_k: int
+    est: str
+    max_new: int
+    submit_step: int
+    first_token_step: int
+    done: bool = False            # lockstep only: finished, slot held
 
 
 class ServingEngine:
-    """Host-side request batcher over the jitted prefill/decode steps."""
+    """Slot-scheduled request engine over the unified jitted serve step.
+
+    ``submit()`` validates and queues a ``Request`` (returns its id);
+    ``step()`` runs one scheduler tick — admit queued requests into free
+    slots (per-request prefill + scatter), then advance the pool one
+    decode step — and returns the requests that finished this tick;
+    ``run()`` ticks until queue and pool drain and returns all results
+    in submission order.  ``metrics`` and ``queue_depth`` expose
+    scheduler health (tokens/step, slot occupancy, backlog)."""
 
     def __init__(self, model: LanguageModel, params, scfg: ServeConfig):
         if scfg.top_k < 1:
@@ -93,117 +263,308 @@ class ServingEngine:
             # 0 would clamp requests into an empty candidate set
             raise ValueError(f"ServeConfig.top_k must be >= 1, "
                              f"got {scfg.top_k}")
+        if scfg.num_slots < 1:
+            raise ValueError(f"ServeConfig.num_slots must be >= 1, "
+                             f"got {scfg.num_slots}")
+        if scfg.scheduler not in SCHEDULERS:
+            raise ValueError(f"ServeConfig.scheduler must be one of "
+                             f"{SCHEDULERS}, got {scfg.scheduler!r}")
+        if scfg.max_new_tokens < 1:
+            raise ValueError("ServeConfig.max_new_tokens must be >= 1")
+        if scfg.temperature is not None and scfg.temperature <= 0:
+            # same contract as SamplingParams.temperature — 0 would
+            # silently degrade to ε-greedy rather than erroring
+            raise ValueError(f"ServeConfig.temperature must be > 0 (or "
+                             f"None for greedy), got {scfg.temperature}")
         self.model = model
         self.params = params
         self.scfg = scfg
-        self._prefill = jax.jit(make_prefill_fn(model),
-                                static_argnames=("max_len",))
-        self._decode = jax.jit(make_decode_fn(model))
-        self._sample_prefill = jax.jit(
-            make_sample_prefill_fn(model, scfg.top_k),
-            static_argnames=("max_len",))
-        self._sample_decode = jax.jit(make_sample_decode_fn(model, scfg.top_k))
-        self._queue: list = []
-        # sampling PRNG stream: instance state so successive run() calls
-        # draw fresh keys (deterministic per engine, not per call)
-        self._base_key = jax.random.key(scfg.seed)
-        self._chunk_i = 0
+        # caches/enc_kvs (args 1, 2) are donated: the steady-state decode
+        # loop aliases the slot pool in place instead of copying the whole
+        # num_slots × max_len cache every token (prefill passes None there
+        # — donating an empty pytree is a no-op); _insert/_reset donate
+        # the pool for the same reason
+        self._serve_step = jax.jit(
+            make_serve_step_fn(model, scfg.top_k),
+            static_argnames=("estimators", "max_len"),
+            donate_argnums=(1, 2))
+        self._insert = jax.jit(model.insert_cache_slot, donate_argnums=(0,))
+        self._reset = jax.jit(model.reset_cache_slot,
+                              static_argnames=("max_len",),
+                              donate_argnums=(0,))
+        self._key = jax.random.key(scfg.seed)
+        # the fixed slot pool — allocated once, reused for every request
+        self._pool = model.init_caches(scfg.num_slots, scfg.max_len)
+        self._enc_pool = None        # lazily shaped from the first request
+        self._slots: list = [None] * scfg.num_slots
+        self._queue: collections.deque = collections.deque()
+        self._next_id = 0
+        self._tick = 0               # scheduler ticks (latency unit)
+        self._enc_shape = None       # pinned (S, F) across requests
+        self.metrics = EngineMetrics(num_slots=scfg.num_slots)
 
-    def add_request(self, prompt_tokens: list, extras: Optional[dict] = None):
-        """extras may carry frontend features ("enc_feats"/"prefix_feats")
-        and per-request sampling knobs ("temperature", "top_k").  A
-        per-request top_k is clamped to [1, ServeConfig.top_k] — the
-        engine config's value is the fused kernel's static candidate
-        cap; raise it there if requests need wider support."""
-        self._queue.append((list(prompt_tokens), extras or {}))
+    # ------------------------------------------------------------- submit
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
 
-    def _pack(self, requests):
+    def submit(self, request: Request) -> int:
+        """Validate and enqueue; returns the request id (results carry
+        it, and ``run()`` orders by it)."""
+        cfg = self.model.cfg
         scfg = self.scfg
-        maxp = max(len(p) for p, _ in requests)
-        b = len(requests)
-        toks = np.full((b, maxp), scfg.pad_id, np.int32)
-        for i, (p, _) in enumerate(requests):
-            toks[i, maxp - len(p):] = p          # left-pad: aligned ends
-        batch = {"tokens": jnp.asarray(toks)}
-        for k in ("enc_feats", "prefix_feats"):
-            if requests[0][1].get(k) is not None:
-                batch[k] = jnp.stack([jnp.asarray(r[1][k]) for r in requests])
-        return batch, maxp
+        prompt = list(request.prompt)
+        if not prompt:
+            raise ValueError("Request.prompt must be non-empty")
+        sp = request.sampling
+        if sp.temperature is not None and sp.temperature <= 0:
+            raise ValueError(f"SamplingParams.temperature must be > 0, "
+                             f"got {sp.temperature}")
+        if sp.top_k is not None and sp.top_k < 1:
+            raise ValueError(f"SamplingParams.top_k must be >= 1, "
+                             f"got {sp.top_k}")
+        if sp.estimator is not None:
+            if cfg.mach is None:
+                raise ValueError("SamplingParams.estimator is a MACH-head "
+                                 "knob; this model serves the OAA head")
+            if sp.estimator not in _ESTIMATORS:
+                raise ValueError(f"SamplingParams.estimator must be one of "
+                                 f"{_ESTIMATORS}, got {sp.estimator!r}")
+        max_new = (request.max_new_tokens
+                   if request.max_new_tokens is not None
+                   else scfg.max_new_tokens)
+        if max_new < 1:
+            raise ValueError("Request.max_new_tokens must be >= 1")
+        prefix = cfg.num_prefix_tokens if request.prefix_feats is not None \
+            else 0
+        if prefix + len(prompt) + max_new - 1 > scfg.max_len:
+            raise ValueError(
+                f"prompt ({prefix + len(prompt)} tokens incl. prefix) + "
+                f"max_new_tokens ({max_new}) exceeds the slot capacity "
+                f"ServeConfig.max_len={scfg.max_len}")
+        self._validate_feats(request)
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, request, max_new, self._tick))
+        return rid
 
-    def _sampling_knobs(self, chunk):
-        """Per-row (temperature, top_k) arrays, or None for all-greedy.
+    def _validate_feats(self, request: Request) -> None:
+        """Frontend-feature consistency: the model decides whether
+        features are required, and every request in one engine must
+        agree on their shape (the cross-attention enc-KV pool is one
+        fixed allocation, like the KV pool)."""
+        cfg = self.model.cfg
+        if cfg.num_encoder_layers:
+            if request.enc_feats is None:
+                raise ValueError(
+                    f"model {cfg.name!r} has an encoder: every Request "
+                    f"needs enc_feats (S, F) — a batch where only some "
+                    f"requests carry features is inconsistent")
+            ef = np.asarray(request.enc_feats)
+            want_f = frontends.frontend_feature_dim(cfg.frontend or "audio")
+            if ef.ndim != 2 or ef.shape[1] != want_f:
+                raise ValueError(f"enc_feats must be (S, {want_f}), "
+                                 f"got {ef.shape}")
+            if self._enc_shape is not None and ef.shape != self._enc_shape:
+                raise ValueError(
+                    f"enc_feats shape {ef.shape} conflicts with this "
+                    f"engine's pinned {self._enc_shape}: the enc-KV slot "
+                    f"pool is one fixed allocation, so every request must "
+                    f"use the same encoder feature shape")
+            enc_shape = ef.shape
+        else:
+            enc_shape = None
+            if request.enc_feats is not None:
+                raise ValueError(f"model {cfg.name!r} has no encoder; "
+                                 f"enc_feats would be silently dropped")
+        if cfg.frontend == "vision":
+            if request.prefix_feats is None:
+                raise ValueError(f"model {cfg.name!r} has a vision "
+                                 f"frontend: every Request needs "
+                                 f"prefix_feats (P, F)")
+            pf = np.asarray(request.prefix_feats)
+            if pf.ndim != 2 or pf.shape != (cfg.num_prefix_tokens,
+                                            frontends.VISION_FEATURE_DIM):
+                raise ValueError(
+                    f"prefix_feats must be ({cfg.num_prefix_tokens}, "
+                    f"{frontends.VISION_FEATURE_DIM}), got {pf.shape}")
+        elif request.prefix_feats is not None:
+            raise ValueError(f"model {cfg.name!r} has no vision frontend; "
+                             f"prefix_feats would be silently dropped")
+        # pin only after the whole request validated — a rejected request
+        # must not constrain future submissions
+        if enc_shape is not None and self._enc_shape is None:
+            self._enc_shape = enc_shape
 
-        A chunk samples iff the engine default or any request asks for
-        it; greedy rows inside a sampled chunk degrade to temperature
-        1e-6 over their top-1 candidate (== argmax)."""
+    # ----------------------------------------------------------- sampling
+    def _row_knobs(self, req: Request) -> tuple:
+        """(temperature, row_top_k, estimator) for one request's row.
+
+        A request samples iff it sets any knob or the engine default
+        temperature is set; otherwise it rides the greedy ε-temperature
+        top-1 path (of its estimator's scores)."""
+        cfg, scfg = self.model.cfg, self.scfg
+        sp = req.sampling
+        est = sp.estimator or (cfg.mach.estimator if cfg.mach is not None
+                               else "unbiased")
+        samples = (sp.temperature is not None or sp.top_k is not None
+                   or scfg.temperature is not None)
+        if not samples:
+            return _GREEDY_TEMP, 1, est
+        t = sp.temperature if sp.temperature is not None else scfg.temperature
+        t = 1.0 if t is None else t          # top_k-only request: temp 1.0
+        k = sp.top_k if sp.top_k is not None else scfg.top_k
+        return max(float(t), _GREEDY_TEMP), int(np.clip(k, 1, scfg.top_k)), est
+
+    # ---------------------------------------------------------- scheduling
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _finish(self, slot: _Slot, reason: str) -> GenerationResult:
+        self.metrics.completed += 1
+        return GenerationResult(
+            request_id=slot.req_id, tokens=tuple(slot.tokens),
+            finish_reason=reason, prompt_len=len(slot.req.prompt),
+            submit_step=slot.submit_step, finish_step=self._tick)
+
+    def _admit(self, finished: list) -> None:
         scfg = self.scfg
+        if scfg.scheduler == "lockstep" and any(
+                s is not None for s in self._slots):
+            return                       # baseline: drain the whole chunk
+        while self._queue:
+            slot_i = self._free_slot()
+            if slot_i is None:
+                return
+            rid, req, max_new, submit_step = self._queue.popleft()
+            temp, row_k, est = self._row_knobs(req)
+            salt = _prng_salt(req.sampling.seed, rid)
+            batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+            prefix = 0
+            if req.enc_feats is not None:
+                batch["enc_feats"] = jnp.asarray(req.enc_feats)[None]
+            if req.prefix_feats is not None:
+                batch["prefix_feats"] = jnp.asarray(req.prefix_feats)[None]
+                prefix = self.model.cfg.num_prefix_tokens
+            one = lambda v, dt: jnp.asarray([v], dt)       # noqa: E731
+            caches, enc_kvs, ids = self._serve_step(
+                self.params, None, None, batch,
+                one(0, jnp.int32), self._key, one(salt, jnp.int32),
+                one(0, jnp.int32), one(temp, jnp.float32),
+                one(row_k, jnp.int32), one(0, jnp.int32),
+                estimators=(est,), max_len=scfg.max_len)
+            self.metrics.prefills += 1
+            tok = int(ids[0])
+            self.metrics.tokens_generated += 1
+            if req.on_token is not None:
+                req.on_token(tok)
+            slot = _Slot(req_id=rid, req=req, salt=salt, tokens=[tok],
+                         pos=prefix + len(req.prompt), temp=temp,
+                         row_k=row_k, est=est, max_new=max_new,
+                         submit_step=submit_step,
+                         first_token_step=self._tick)
+            if (scfg.eos_id >= 0 and tok == scfg.eos_id) or max_new == 1:
+                # finished at prefill — the slot is never occupied
+                reason = "eos" if (scfg.eos_id >= 0
+                                   and tok == scfg.eos_id) else "length"
+                finished.append(self._finish(slot, reason))
+                continue
+            self._pool = self._insert(self._pool, caches, slot_i)
+            if enc_kvs is not None:
+                if self._enc_pool is None:
+                    self._enc_pool = jax.tree.map(
+                        lambda x: jnp.zeros(
+                            x.shape[:1] + (scfg.num_slots,) + x.shape[2:],
+                            x.dtype), enc_kvs)
+                self._enc_pool = self._insert(self._enc_pool, enc_kvs,
+                                              slot_i)
+            self._slots[slot_i] = slot
 
-        def row_samples(extras):
-            return (scfg.temperature is not None
-                    or "temperature" in extras or "top_k" in extras)
-
-        if not any(row_samples(e) for _, e in chunk):
-            return None
-        temps, row_k = [], []
-        for _, extras in chunk:
-            if not row_samples(extras):         # greedy row in mixed batch
-                t, k = 1e-6, 1
+    def _decode_once(self, finished: list) -> None:
+        scfg = self.scfg
+        live = [s for s in self._slots if s is not None and not s.done]
+        if not live:
+            return
+        estimators = tuple(sorted({s.est for s in live}))
+        n = scfg.num_slots
+        toks = np.zeros((n, 1), np.int32)
+        pos = np.zeros((n,), np.int32)
+        req_ids = np.zeros((n,), np.int32)
+        tok_idx = np.zeros((n,), np.int32)
+        temps = np.full((n,), _GREEDY_TEMP, np.float32)
+        row_k = np.ones((n,), np.int32)
+        est_sel = np.zeros((n,), np.int32)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            toks[i, 0] = s.tokens[-1]
+            pos[i] = s.pos
+            if s.done:
+                continue                 # lockstep hold: inert greedy row
+            req_ids[i] = s.salt
+            tok_idx[i] = len(s.tokens)
+            temps[i] = s.temp
+            row_k[i] = s.row_k
+            est_sel[i] = estimators.index(s.est)
+        self._pool, self._enc_pool, ids = self._serve_step(
+            self.params, self._pool, self._enc_pool,
+            {"tokens": jnp.asarray(toks)}, jnp.asarray(pos), self._key,
+            jnp.asarray(req_ids), jnp.asarray(tok_idx),
+            jnp.asarray(temps), jnp.asarray(row_k), jnp.asarray(est_sel),
+            estimators=estimators, max_len=scfg.max_len)
+        ids = np.asarray(ids)
+        self.metrics.decode_steps += 1
+        self.metrics.live_slot_steps += len(live)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            s.pos += 1                   # every slot's cache advanced
+            if s.done:
+                continue
+            tok = int(ids[i])
+            s.tokens.append(tok)
+            self.metrics.tokens_generated += 1
+            if s.req.on_token is not None:
+                s.req.on_token(tok)
+            reason = None
+            if scfg.eos_id >= 0 and tok == scfg.eos_id:
+                reason = "eos"
+            elif len(s.tokens) >= s.max_new:
+                reason = "length"
+            if reason is None:
+                continue
+            finished.append(self._finish(s, reason))
+            if scfg.scheduler == "continuous":
+                # free immediately: next tick admits into this slot
+                self._pool = self._reset(self._pool, i,
+                                         max_len=scfg.max_len)
+                self._slots[i] = None
             else:
-                # any sampling knob opts the row in: a top_k-only request
-                # samples at temperature 1.0, it is not degraded to greedy
-                t = extras.get("temperature", scfg.temperature)
-                t = 1.0 if t is None else t
-                k = extras.get("top_k", scfg.top_k)
-            temps.append(max(float(t), 1e-6))
-            row_k.append(int(np.clip(k, 1, scfg.top_k)))
-        return (jnp.asarray(temps, jnp.float32),
-                jnp.asarray(row_k, jnp.int32))
+                s.done = True            # lockstep: hold until chunk drains
+        if scfg.scheduler == "lockstep" and all(
+                s is None or s.done for s in self._slots):
+            for i, s in enumerate(self._slots):
+                if s is not None:
+                    self._pool = self._reset(self._pool, i,
+                                             max_len=scfg.max_len)
+                    self._slots[i] = None
+
+    def step(self) -> list:
+        """One scheduler tick: admit into free slots, advance the pool
+        one decode step.  Returns the ``GenerationResult``s that
+        finished this tick."""
+        finished: list = []
+        self._admit(finished)
+        self._decode_once(finished)
+        self._tick += 1
+        return finished
 
     def run(self) -> list:
-        """Serve all queued requests; returns list of generated id lists."""
-        scfg = self.scfg
-        outputs = []
-        while self._queue:
-            chunk = self._queue[:scfg.batch_size]
-            self._queue = self._queue[scfg.batch_size:]
-            n_real = len(chunk)
-            # pad the batch up to a fixed size so the jit cache is stable
-            while len(chunk) < scfg.batch_size:
-                chunk.append((chunk[0][0], chunk[0][1]))
-            batch, plen = self._pack(chunk)
-            knobs = self._sampling_knobs(chunk)
-            ckey = jax.random.fold_in(self._base_key, self._chunk_i)
-            self._chunk_i += 1
-            if knobs is None:
-                caches, enc_kvs, ids = self._prefill(
-                    self.params, batch, max_len=scfg.max_len)
-            else:
-                temps, row_k = knobs
-                caches, enc_kvs, ids = self._sample_prefill(
-                    self.params, batch, jax.random.fold_in(ckey, 0),
-                    temps, row_k, max_len=scfg.max_len)
-            b = ids.shape[0]
-            gen = [ids]
-            pos = jnp.full((b,), plen, jnp.int32)
-            done = jnp.zeros((b,), bool)
-            for step in range(scfg.max_new_tokens - 1):
-                if knobs is None:
-                    caches, ids = self._decode(self.params, caches, enc_kvs,
-                                               gen[-1], pos)
-                else:
-                    caches, ids = self._sample_decode(
-                        self.params, caches, enc_kvs, gen[-1], pos,
-                        jax.random.fold_in(ckey, step + 1), temps, row_k)
-                gen.append(ids)
-                pos = pos + 1
-                if scfg.eos_id >= 0:
-                    done = done | (ids == scfg.eos_id)
-                    if bool(done.all()):
-                        break
-            stacked = np.stack([np.asarray(g) for g in gen], axis=1)
-            for i in range(n_real):
-                seq = stacked[i].tolist()
-                if scfg.eos_id >= 0 and scfg.eos_id in seq:
-                    seq = seq[:seq.index(scfg.eos_id) + 1]
-                outputs.append(seq)
-        return outputs
+        """Drain queue and pool; results in submission order."""
+        out: list = []
+        while self._queue or any(s is not None for s in self._slots):
+            out.extend(self.step())
+        return sorted(out, key=lambda r: r.request_id)

@@ -1,4 +1,6 @@
-"""Serving engine: batched requests end-to-end, MACH greedy decode."""
+"""Serving: slot-scheduled continuous batching engine + MACH decode."""
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -7,8 +9,12 @@ import pytest
 
 from repro.core.mach import MACHConfig, mach_meta_probs
 from repro.core.estimators import predict_classes
+from repro.kernels import ops
 from repro.models import LanguageModel, ModelConfig
-from repro.serving import ServeConfig, ServingEngine
+from repro.models import attention as attn_lib
+from repro.serving import (GenerationResult, Request, SamplingParams,
+                           ServeConfig, ServingEngine)
+from repro.serving.engine import make_serve_step_fn
 
 
 @pytest.fixture(scope="module")
@@ -21,20 +27,454 @@ def served():
     return cfg, model, params
 
 
+@pytest.fixture(scope="module")
+def served_enc_dec():
+    cfg = ModelConfig(name="srv-ed", num_layers=2, d_model=32, num_heads=4,
+                      num_kv_heads=4, d_ff=64, vocab_size=120,
+                      family="enc_dec", num_encoder_layers=2,
+                      frontend="audio", dtype=jnp.float32,
+                      mach=MACHConfig(120, 16, 4))
+    model = LanguageModel(cfg)
+    params, _ = model.init(jax.random.key(1))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_new_tokens", 6)
+    return ServingEngine(model, params, ServeConfig(**kw))
+
+
+def _reference_decode(model, params, prompt, n, max_len=32, extras=None):
+    """Per-request greedy decode straight off the model API — the
+    engine must match it token for token (no padding, no batching
+    effects)."""
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    if extras:
+        batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
+    caches, enc_kvs, h = model.prefill(params, batch, max_len)
+    ids, _ = model.next_token(params, h)
+    toks = [int(ids[0])]
+    pos = len(prompt)
+    for _ in range(n - 1):
+        caches, h = model.decode_step(params, caches, enc_kvs,
+                                      jnp.asarray([toks[-1]], jnp.int32),
+                                      jnp.asarray([pos], jnp.int32))
+        ids, _ = model.next_token(params, h)
+        toks.append(int(ids[0]))
+        pos += 1
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# engine basics
+# ---------------------------------------------------------------------------
+
 def test_engine_batched_requests(served):
     cfg, model, params = served
-    eng = ServingEngine(model, params,
-                        ServeConfig(max_len=32, batch_size=4,
-                                    max_new_tokens=6))
+    eng = _engine(model, params)
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12]]
+    ids = [eng.submit(Request(prompt=p)) for p in prompts]
+    assert ids == list(range(5))
+    outs = eng.run()
+    assert [r.request_id for r in outs] == ids        # submission order
+    for r in outs:
+        assert isinstance(r, GenerationResult)
+        assert len(r.tokens) == 6
+        assert r.finish_reason == "length"
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+    m = eng.metrics
+    assert m.prefills == 5 and m.completed == 5
+    assert m.tokens_generated == 30
+    assert eng.queue_depth == 0
+
+
+def test_greedy_slot_engine_matches_reference_decode(served):
+    """Token-level parity between the slot engine and a per-request
+    reference decode: per-request prefill + per-slot cache writes mean
+    scheduling cannot change a request's tokens."""
+    cfg, model, params = served
+    eng = _engine(model, params, num_slots=2)
     prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12]]
     for p in prompts:
-        eng.add_request(p)
+        eng.submit(Request(prompt=p))
     outs = eng.run()
-    assert len(outs) == len(prompts)
-    for seq in outs:
-        assert len(seq) == 6
+    for p, r in zip(prompts, outs):
+        assert list(r.tokens) == _reference_decode(model, params, p, 6), p
+
+
+def test_slot_reuse_ragged_workload(served):
+    """Short requests finish, free their slot, and queued requests are
+    admitted mid-decode — visible in the metrics and in strictly fewer
+    decode steps than the lockstep baseline (identical tokens)."""
+    cfg, model, params = served
+    reqs = [([1, 2, 3], 6), ([4, 5], 2), ([6, 7, 8, 9], 6),
+            ([10], 2), ([11, 12], 4)]
+    runs = {}
+    for sched in ("continuous", "lockstep"):
+        eng = _engine(model, params, num_slots=2, scheduler=sched)
+        for p, mn in reqs:
+            eng.submit(Request(prompt=p, max_new_tokens=mn))
+        runs[sched] = (eng.run(), eng.metrics)
+    cont_out, cont_m = runs["continuous"]
+    lock_out, lock_m = runs["lockstep"]
+    assert [r.tokens for r in cont_out] == [r.tokens for r in lock_out]
+    assert cont_m.decode_steps < lock_m.decode_steps
+    # 5 requests over 2 slots: slots were reused mid-decode
+    assert cont_m.prefills == 5 and cont_m.completed == 5
+    assert cont_m.occupancy > lock_m.occupancy
+    for (_, mn), r in zip(reqs, cont_out):
+        assert len(r.tokens) == mn
+    # latency: the 2-token request finished well before the long ones
+    lat = {r.request_id: r.latency_steps for r in cont_out}
+    assert lat[1] < lat[2]
+
+
+def test_eos_frees_slot_immediately(served):
+    cfg, model, params = served
+    base = _engine(model, params, num_slots=1, max_new_tokens=6)
+    base.submit(Request(prompt=[3, 1, 4]))
+    base.submit(Request(prompt=[2, 7]))
+    outs = base.run()
+    steps_no_eos = base.metrics.decode_steps
+    eos = outs[0].tokens[2]                       # appears mid-stream
+    eng = _engine(model, params, num_slots=1, max_new_tokens=6,
+                  eos_id=int(eos))
+    eng.submit(Request(prompt=[3, 1, 4]))
+    eng.submit(Request(prompt=[2, 7]))
+    outs2 = eng.run()
+    cut = list(outs[0].tokens).index(eos)
+    assert outs2[0].finish_reason == "eos"
+    assert list(outs2[0].tokens) == list(outs[0].tokens)[:cut + 1]
+    assert eng.metrics.decode_steps < steps_no_eos
+
+
+def test_max_new_tokens_one_finishes_at_prefill(served):
+    cfg, model, params = served
+    eng = _engine(model, params, num_slots=1)
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=1))
+    eng.submit(Request(prompt=[3, 4], max_new_tokens=1))
+    outs = eng.run()
+    assert [len(r.tokens) for r in outs] == [1, 1]
+    assert eng.metrics.decode_steps == 0          # never occupied a slot
+    for p, r in zip([[1, 2], [3, 4]], outs):
+        assert list(r.tokens) == _reference_decode(model, params, p, 1)
+
+
+def test_on_token_streaming_callback(served):
+    cfg, model, params = served
+    seen = []
+    eng = _engine(model, params)
+    eng.submit(Request(prompt=[1, 2, 3], on_token=seen.append))
+    out = eng.run()[0]
+    assert tuple(seen) == out.tokens
+
+
+# ---------------------------------------------------------------------------
+# sampling: determinism, inertness, per-request streams
+# ---------------------------------------------------------------------------
+
+def test_seeded_sampling_determinism_across_engines(served):
+    """Same seed + same submission order on fresh engines (and fresh
+    run() calls) -> identical samples."""
+    cfg, model, params = served
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10]]
+
+    def run_once():
+        eng = _engine(model, params, num_slots=4, max_new_tokens=5,
+                      temperature=0.9, top_k=8, seed=42)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(prompt=p, sampling=SamplingParams(
+                temperature=0.5 + 0.2 * i, top_k=2 + i)))
+        return [r.tokens for r in eng.run()]
+
+    outs1, outs2 = run_once(), run_once()
+    assert outs1 == outs2
+    for seq in outs1:
+        assert len(seq) == 5
         assert all(0 <= t < cfg.vocab_size for t in seq)
 
+
+def test_engine_fresh_streams_across_runs(served):
+    """Resubmitting the same sampled prompt to one engine must not
+    replay the identical continuation (each submission gets a fresh
+    request id and with it a fresh PRNG stream)."""
+    cfg, model, params = served
+    eng = _engine(model, params, num_slots=1, max_new_tokens=6,
+                  temperature=1.5, top_k=8, seed=0)
+    outs = []
+    for _ in range(3):
+        eng.submit(Request(prompt=[1, 2, 3]))
+        outs.append(eng.run()[0].tokens)
+    assert len(set(outs)) > 1, outs
+
+
+def test_sampling_seed_is_slot_and_neighbour_independent(served):
+    """An explicit SamplingParams.seed pins the request's stream: the
+    continuation is identical whatever the queue order, batch
+    neighbours, or slot placement — free/greedy rows are inert (their
+    ε-temperature top-1 pick consumes no useful randomness)."""
+    cfg, model, params = served
+
+    def run_A(order):
+        eng = _engine(model, params, seed=7)
+        rid = None
+        for name in order:
+            if name == "A":
+                rid = eng.submit(Request(prompt=[3, 7], sampling=SamplingParams(
+                    temperature=1.3, top_k=8, seed=99)))
+            else:
+                eng.submit(Request(prompt=[9, 1, 4]))
+        return {r.request_id: r.tokens for r in eng.run()}[rid]
+
+    a1 = run_A(["A", "B", "C"])
+    a2 = run_A(["B", "C", "A"])
+    a3 = run_A(["A"])
+    assert a1 == a2 == a3
+
+
+def test_explicit_seed_does_not_collide_with_request_id_streams(served):
+    """Explicit seeds and engine-assigned request ids draw from
+    disjoint salt namespaces: a request with seed=N must not replay the
+    stream of the engine's N-th (unseeded) submission."""
+    cfg, model, params = served
+    knobs = dict(temperature=1.4, top_k=8)
+
+    eng = _engine(model, params, num_slots=1, seed=3)
+    for _ in range(2):                                # burn rids 0, 1
+        eng.submit(Request(prompt=[5]))
+    rid2 = eng.submit(Request(prompt=[3, 7],
+                              sampling=SamplingParams(**knobs)))
+    unseeded = {r.request_id: r.tokens for r in eng.run()}[rid2]
+
+    eng2 = _engine(model, params, num_slots=1, seed=3)
+    seeded_rid = eng2.submit(Request(prompt=[3, 7], sampling=SamplingParams(
+        seed=2, **knobs)))
+    seeded = {r.request_id: r.tokens for r in eng2.run()}[seeded_rid]
+    assert seeded != unseeded
+
+
+def test_greedy_request_unaffected_by_sampled_neighbours(served):
+    """A greedy request batched with sampled ones produces exactly its
+    solo greedy continuation (inert ε-temperature top-1 rows)."""
+    cfg, model, params = served
+    want = _reference_decode(model, params, [3, 1, 4], 4)
+    eng = _engine(model, params, max_new_tokens=4, seed=7)
+    rid = eng.submit(Request(prompt=[3, 1, 4]))
+    eng.submit(Request(prompt=[2, 7], sampling=SamplingParams(
+        temperature=1.2, top_k=6)))
+    outs = {r.request_id: r.tokens for r in eng.run()}
+    assert list(outs[rid]) == want
+
+
+def test_per_request_estimator_threading(served):
+    """Two live requests with different estimators share one pooled
+    decode call; each matches its solo-engine run."""
+    cfg, model, params = served
+
+    def solo(est):
+        eng = _engine(model, params, num_slots=1, max_new_tokens=4)
+        rid = eng.submit(Request(prompt=[3, 7], sampling=SamplingParams(
+            estimator=est)))
+        return {r.request_id: r.tokens for r in eng.run()}[rid]
+
+    eng = _engine(model, params, num_slots=2, max_new_tokens=4)
+    ia = eng.submit(Request(prompt=[3, 7],
+                            sampling=SamplingParams(estimator="median")))
+    ib = eng.submit(Request(prompt=[3, 7]))
+    outs = {r.request_id: r.tokens for r in eng.run()}
+    assert outs[ia] == solo("median")
+    assert outs[ib] == solo(None)
+    assert outs[ia] != outs[ib]       # the estimator actually matters
+
+
+# ---------------------------------------------------------------------------
+# admission validation
+# ---------------------------------------------------------------------------
+
+def test_submit_validation_errors(served):
+    cfg, model, params = served
+    eng = _engine(model, params)
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(Request(prompt=[]))
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(Request(prompt=[1], sampling=SamplingParams(
+            temperature=0.0)))
+    with pytest.raises(ValueError, match="top_k"):
+        eng.submit(Request(prompt=[1], sampling=SamplingParams(top_k=0)))
+    with pytest.raises(ValueError, match="estimator"):
+        eng.submit(Request(prompt=[1], sampling=SamplingParams(
+            estimator="mean")))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=[1] * 30, max_new_tokens=10))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(prompt=[1], max_new_tokens=0))   # not the default!
+    with pytest.raises(ValueError, match="no encoder"):
+        eng.submit(Request(prompt=[1], enc_feats=np.zeros((4, 8))))
+    with pytest.raises(ValueError, match="no vision frontend"):
+        eng.submit(Request(prompt=[1], prefix_feats=np.zeros((4, 8))))
+
+
+def test_engine_config_validation(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="top_k"):
+        ServingEngine(model, params, ServeConfig(top_k=0))
+    with pytest.raises(ValueError, match="num_slots"):
+        ServingEngine(model, params, ServeConfig(num_slots=0))
+    with pytest.raises(ValueError, match="scheduler"):
+        ServingEngine(model, params, ServeConfig(scheduler="chunked"))
+    with pytest.raises(ValueError, match="temperature"):
+        ServingEngine(model, params, ServeConfig(temperature=0.0))
+
+
+def test_enc_feats_consistency_validation(served_enc_dec):
+    """The old engine probed requests[0] for features: a batch where
+    later requests carried them silently dropped them, one where only
+    the first did crashed in jnp.stack.  Admission now validates every
+    request: features required by the model, and shape-consistent."""
+    cfg, model, params = served_enc_dec
+    eng = _engine(model, params)
+    with pytest.raises(ValueError, match="needs enc_feats"):
+        eng.submit(Request(prompt=[1, 2]))
+    with pytest.raises(ValueError, match=r"\(S, 1024\)"):
+        eng.submit(Request(prompt=[1, 2], enc_feats=np.zeros((4, 8),
+                                                             np.float32)))
+    # a rejected request must not pin the engine's enc-feats shape:
+    # this one fails later in validation (prefix on a non-vision model)
+    with pytest.raises(ValueError, match="no vision frontend"):
+        eng.submit(Request(prompt=[1, 2],
+                           enc_feats=np.zeros((4, 1024), np.float32),
+                           prefix_feats=np.zeros((2, 8), np.float32)))
+    eng.submit(Request(prompt=[1, 2],
+                       enc_feats=np.zeros((4, 1024), np.float32)))
+    with pytest.raises(ValueError, match="pinned"):
+        eng.submit(Request(prompt=[1, 2],
+                           enc_feats=np.zeros((6, 1024), np.float32)))
+
+
+def test_enc_dec_slot_engine_end_to_end(served_enc_dec):
+    """Cross-attention KV is pooled per slot exactly like the decode
+    caches: each request decodes against its *own* encoder output, and
+    matches its solo reference decode."""
+    cfg, model, params = served_enc_dec
+    rng = np.random.default_rng(3)
+    feats = [rng.standard_normal((4, 1024)).astype(np.float32)
+             for _ in range(3)]
+    prompts = [[1, 2, 3], [4, 5], [6, 7]]
+    eng = _engine(model, params, num_slots=2, max_new_tokens=4)
+    for p, f in zip(prompts, feats):
+        eng.submit(Request(prompt=p, enc_feats=f))
+    outs = eng.run()
+    for p, f, r in zip(prompts, feats, outs):
+        want = _reference_decode(model, params, p, 4,
+                                 extras={"enc_feats": f})
+        assert list(r.tokens) == want
+
+
+# ---------------------------------------------------------------------------
+# per-slot cache machinery
+# ---------------------------------------------------------------------------
+
+def test_insert_and_reset_cache_slot(served):
+    cfg, model, params = served
+    pool = model.init_caches(3, 16)
+    caches, _, _ = model.prefill(
+        params, {"tokens": jnp.asarray([[1, 2, 3]], jnp.int32)}, 16)
+    pool2 = model.insert_cache_slot(pool, caches, 1)
+    kv_pool, kv_one = pool2[0][0], caches[0][0]
+    np.testing.assert_array_equal(np.asarray(kv_pool.k[:, 1]),
+                                  np.asarray(kv_one.k[:, 0]))
+    assert int(kv_pool.index[0, 1]) == 3
+    # neighbouring slots untouched (still empty)
+    assert int(kv_pool.index[0, 0]) == 0 and int(kv_pool.index[0, 2]) == 0
+    assert bool(jnp.all(kv_pool.positions[:, 0] == -1))
+    # reset restores the freshly initialized slot
+    pool3 = model.reset_cache_slot(pool2, 1, 16)
+    kv3 = pool3[0][0]
+    assert int(kv3.index[0, 1]) == 0
+    assert bool(jnp.all(kv3.positions[:, 1] == -1))
+    assert bool(jnp.all(kv3.k[:, 1] == 0))
+
+
+def test_cache_update_decode_per_row_writes():
+    """per_row mode writes each row's KV at its own index (the slot
+    engine's pooled decode); lockstep mode writes all rows at index[0]."""
+    cache = attn_lib.init_cache(2, 8, 1, 4, jnp.float32)
+    cache = cache._replace(index=jnp.asarray([2, 5], jnp.int32))
+    k1 = jnp.ones((2, 1, 1, 4), jnp.float32)
+    upd = attn_lib.cache_update_decode(cache, k1, 2 * k1, ring=False,
+                                       per_row=True)
+    np.testing.assert_array_equal(np.asarray(upd.index), [3, 6])
+    assert float(upd.k[0, 2, 0, 0]) == 1.0 and float(upd.k[1, 5, 0, 0]) == 1.0
+    assert float(upd.k[0, 5, 0, 0]) == 0.0 and float(upd.k[1, 2, 0, 0]) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(upd.positions), [[-1, -1, 2, -1, -1, -1, -1, -1],
+                                    [-1, -1, -1, -1, -1, 5, -1, -1]])
+    # ring mode wraps per row
+    ring = attn_lib.init_cache(2, 4, 1, 4, jnp.float32)
+    ring = ring._replace(index=jnp.asarray([5, 2], jnp.int32))
+    upd = attn_lib.cache_update_decode(ring, k1, k1, ring=True, per_row=True)
+    assert float(upd.k[0, 1, 0, 0]) == 1.0     # 5 % 4
+    assert float(upd.k[1, 2, 0, 0]) == 1.0
+
+
+def test_unified_serve_step_no_bv_tensor(served):
+    """Acceptance: the unified serve step (kernel path) never
+    materializes a (batch, V) score tensor — greedy and sampled rows
+    both route through the fused streaming top-k."""
+    from benchmarks.common import intermediate_avals
+    cfg, model, params = served
+    slots, v = 3, cfg.vocab_size
+    pool = model.init_caches(slots, 16)
+    serve_step = make_serve_step_fn(model, top_k=8)
+    z = jnp.zeros((slots,), jnp.int32)
+    args = (params, pool, None, {"tokens": jnp.zeros((slots, 1), jnp.int32)},
+            z, jax.random.key(0), z, z,
+            jnp.asarray([1e-6, 0.8, 1.2], jnp.float32),
+            jnp.asarray([1, 4, 8], jnp.int32), z)
+    orig = ops.mach_topk
+    ops.mach_topk = functools.partial(orig, use_pallas=True, interpret=True)
+    try:
+        jaxpr = jax.make_jaxpr(functools.partial(
+            serve_step, estimators=("unbiased",), max_len=16))(*args).jaxpr
+    finally:
+        ops.mach_topk = orig
+    bad = [tuple(a.shape) for a in intermediate_avals(jaxpr)
+           if hasattr(a, "shape") and v in a.shape and slots in a.shape]
+    assert not bad, bad
+
+
+@pytest.mark.parametrize("pattern,extra", [
+    (("rglru", "attn_local"), {"local_window": 8, "rnn_width": 32,
+                               "family": "hybrid"}),
+    (("mlstm", "slstm"), {"family": "xlstm"}),
+])
+def test_slot_engine_parity_recurrent_and_ring_substrates(pattern, extra):
+    """Per-slot decode must be bit-identical to a solo decode on the
+    stateful substrates too: ring-buffer KV writes (idx % capacity per
+    row) and per-row recurrent/xLSTM states, across slot reuse."""
+    cfg = ModelConfig(name=f"srv-{pattern[0]}", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=100,
+                      block_pattern=pattern, dtype=jnp.float32,
+                      scan_layers=False, remat="none",
+                      mach=MACHConfig(100, 16, 4), **extra)
+    model = LanguageModel(cfg)
+    params, _ = model.init(jax.random.key(6))
+    # max_len 16 > local_window 8 engages the ring cache
+    eng = _engine(model, params, max_len=16, num_slots=2, max_new_tokens=5)
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]      # 3 reqs over 2 slots
+    for p in prompts:
+        eng.submit(Request(prompt=p))
+    outs = eng.run()
+    for p, r in zip(prompts, outs):
+        want = _reference_decode(model, params, p, 5, max_len=16)
+        assert list(r.tokens) == want, (pattern, p)
+
+
+# ---------------------------------------------------------------------------
+# model-level decode surface (unchanged semantics)
+# ---------------------------------------------------------------------------
 
 def test_greedy_decode_matches_reference(served):
     """Engine's next_token (fused kernel path on TPU; ref on CPU) equals
@@ -60,11 +500,18 @@ def test_oaa_serving_parity():
     logits = model.oaa_logits(params, h)
     np.testing.assert_array_equal(np.asarray(ids),
                                   np.asarray(jnp.argmax(logits, -1)))
+    # and the slot engine serves the OAA head end to end
+    eng = _engine(model, params, num_slots=2, max_new_tokens=3)
+    eng.submit(Request(prompt=[1, 2]))
+    eng.submit(Request(prompt=[3]))
+    for r in eng.run():
+        assert len(r.tokens) == 3
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
 
 
 def test_lockstep_decode_positions(served):
-    """Engine left-pads prompts so the batch decodes in lockstep —
-    decode output at each step is finite and cache positions advance."""
+    """Lockstep decode (per_row=False) stays supported for lockstep
+    callers: positions advance uniformly and outputs stay finite."""
     cfg, model, params = served
     toks = jnp.asarray([[0, 0, 1, 2], [3, 4, 5, 6]], jnp.int32)
     caches, enc_kvs, h = model.prefill(params, {"tokens": toks}, max_len=16)
@@ -82,8 +529,8 @@ def test_lockstep_decode_positions(served):
 def test_greedy_decode_honors_estimator():
     """With a min/median MACHConfig, next_token must follow the
     configured prediction rule (k=1 streaming kernel), not the
-    summed-score rule — and greedy rows inside a mixed sampled batch
-    must produce the same tokens as a pure-greedy batch."""
+    summed-score rule — and the slot engine's greedy ε-temperature
+    top-1 path must agree with it."""
     cfg = ModelConfig(name="srv3", num_layers=1, d_model=32, num_heads=2,
                       num_kv_heads=1, d_ff=64, vocab_size=120,
                       dtype=jnp.float32,
@@ -96,95 +543,14 @@ def test_greedy_decode_honors_estimator():
     want = predict_classes(meta, cfg.mach.table(), "median")
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
 
-    pure = ServingEngine(model, params,
-                         ServeConfig(max_len=16, batch_size=2,
-                                     max_new_tokens=3))
-    pure.add_request([3, 7])
-    pure.add_request([9])
-    want_seq = pure.run()[0]
-    mixed = ServingEngine(model, params,
-                          ServeConfig(max_len=16, batch_size=2,
-                                      max_new_tokens=3, seed=2))
-    mixed.add_request([3, 7])                          # greedy row
-    mixed.add_request([9], {"temperature": 1.1, "top_k": 6})
-    assert mixed.run()[0] == want_seq
-
-
-def test_sampling_knobs_row_semantics(served):
-    """A top_k-only request samples (temp 1.0, its k); only rows with
-    no sampling knobs at all degrade to greedy in a mixed batch."""
-    cfg, model, params = served
-    eng = ServingEngine(model, params,
-                        ServeConfig(max_len=16, batch_size=3,
-                                    max_new_tokens=2, top_k=8))
-    chunk = [([1], {"top_k": 4}),            # sampling, default temp 1.0
-             ([2], {}),                      # greedy row
-             ([3], {"temperature": 0.3})]    # sampling, default k cap
-    temps, row_k = eng._sampling_knobs(chunk)
-    np.testing.assert_allclose(np.asarray(temps), [1.0, 1e-6, 0.3])
-    np.testing.assert_array_equal(np.asarray(row_k), [4, 1, 8])
-    # all-greedy chunk -> no sampling path at all
-    assert eng._sampling_knobs([([1], {}), ([2], {})]) is None
-
-
-def test_engine_sampling_mode(served):
-    """Engine-level sampling (fused streaming top-k path): per-request
-    temperature/top-k, deterministic under a fixed seed."""
-    cfg, model, params = served
-    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10]]
-
-    def run_once():
-        eng = ServingEngine(model, params,
-                            ServeConfig(max_len=32, batch_size=4,
-                                        max_new_tokens=5, temperature=0.9,
-                                        top_k=8, seed=42))
-        for i, p in enumerate(prompts):
-            eng.add_request(p, {"temperature": 0.5 + 0.2 * i,
-                                "top_k": 2 + i})
-        return eng.run()
-
-    outs1, outs2 = run_once(), run_once()
-    assert outs1 == outs2                      # same seed -> same samples
-    assert len(outs1) == len(prompts)
-    for seq in outs1:
-        assert len(seq) == 5
-        assert all(0 <= t < cfg.vocab_size for t in seq)
-
-
-def test_engine_fresh_keys_across_runs(served):
-    """Successive run() calls on one engine must draw fresh PRNG keys:
-    resubmitting the same sampled prompt should not replay the identical
-    'random' continuation every call."""
-    cfg, model, params = served
-    eng = ServingEngine(model, params,
-                        ServeConfig(max_len=32, batch_size=1,
-                                    max_new_tokens=6, temperature=1.5,
-                                    top_k=8, seed=0))
-    outs = []
-    for _ in range(3):
-        eng.add_request([1, 2, 3])
-        outs.append(tuple(eng.run()[0]))
-    assert len(set(outs)) > 1, outs
-
-
-def test_engine_mixed_greedy_and_sampled_chunk(served):
-    """A greedy request batched with sampled ones must still produce its
-    greedy continuation (temperature ~0 over the top-1 candidate)."""
-    cfg, model, params = served
-    greedy_eng = ServingEngine(model, params,
-                               ServeConfig(max_len=32, batch_size=2,
-                                           max_new_tokens=4))
-    greedy_eng.add_request([3, 1, 4])
-    greedy_eng.add_request([2, 7])
-    want = greedy_eng.run()[0]
-
-    mixed = ServingEngine(model, params,
-                          ServeConfig(max_len=32, batch_size=2,
-                                      max_new_tokens=4, seed=7))
-    mixed.add_request([3, 1, 4])                       # greedy row
-    mixed.add_request([2, 7], {"temperature": 1.2, "top_k": 6})
-    outs = mixed.run()
-    assert outs[0] == want
+    want_seq = _reference_decode(model, params, [3, 7], 3, max_len=16)
+    eng = _engine(model, params, max_len=16, num_slots=2, max_new_tokens=3,
+                  seed=2)
+    rid = eng.submit(Request(prompt=[3, 7]))               # greedy row
+    eng.submit(Request(prompt=[9], sampling=SamplingParams(
+        temperature=1.1, top_k=6)))
+    outs = {r.request_id: r.tokens for r in eng.run()}
+    assert list(outs[rid]) == want_seq
 
 
 def test_sample_token_topk(served):
@@ -194,7 +560,6 @@ def test_sample_token_topk(served):
     h = jax.random.normal(jax.random.key(9), (4, cfg.d_model))
     logits = model.mach_logits(params, h)
     meta = mach_meta_probs(logits.astype(jnp.float32))
-    from repro.kernels import ops
     scores = ops.mach_scores(jnp.moveaxis(meta, 0, 1), cfg.mach.table())
     topk_sets = [set(np.asarray(jax.lax.top_k(scores[i], 5)[1]).tolist())
                  for i in range(4)]
@@ -230,12 +595,6 @@ def test_sample_token_row_top_k_zero_clamped(served):
     np.testing.assert_array_equal(np.asarray(s[2]), np.asarray(greedy[2]))
 
 
-def test_engine_rejects_zero_top_k_cap(served):
-    cfg, model, params = served
-    with pytest.raises(ValueError):
-        ServingEngine(model, params, ServeConfig(top_k=0))
-
-
 def test_sample_token_matches_legacy_summed_score_distribution(served):
     """The fused path must reproduce the historical sampling semantics
     exactly: categorical over softmax(summed scores / T) (Eq. 2's affine
@@ -244,7 +603,6 @@ def test_sample_token_matches_legacy_summed_score_distribution(served):
     h = jax.random.normal(jax.random.key(13), (4, cfg.d_model))
     logits = model.mach_logits(params, h)
     meta = mach_meta_probs(logits.astype(jnp.float32))
-    from repro.kernels import ops
     scores = ops.mach_scores(jnp.moveaxis(meta, 0, 1), cfg.mach.table())
     for seed in range(5):
         for temp in (0.5, 0.7, 1.3):
