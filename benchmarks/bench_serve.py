@@ -26,6 +26,8 @@ Writes ``BENCH_serve.json``.
 
 from __future__ import annotations
 
+BENCH_FILE = "BENCH_serve.json"        # regression-gated by benchmarks/run.py
+
 import argparse
 import functools
 import json

@@ -36,6 +36,8 @@ Writes ``BENCH_sparse.json`` (see ``--out``).
 
 from __future__ import annotations
 
+BENCH_FILE = "BENCH_sparse.json"        # regression-gated by benchmarks/run.py
+
 import argparse
 import json
 import sys

@@ -45,6 +45,8 @@ memory trajectory is tracked from this PR forward.
 
 from __future__ import annotations
 
+BENCH_FILE = "BENCH_xent.json"        # regression-gated by benchmarks/run.py
+
 import argparse
 import json
 import sys

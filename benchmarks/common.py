@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import subprocess
 import time
 
 import jax
@@ -66,6 +68,56 @@ def make_csr_case(n, d, r, b, nnz_max, seed=0, dtype=jnp.float32,
     y = jnp.asarray(rng.integers(0, b, (n, r)), jnp.int32)
     g = jnp.asarray(rng.normal(size=n), jnp.float32)
     return indptr, indices, values, w, bias, y, g
+
+
+def load_committed_bench(path: str):
+    """The last *committed* version of a BENCH_*.json (via ``git show
+    HEAD:path``), or None when the file is untracked / unparsable.
+    The regression gate compares fresh numbers against this, so the
+    perf trajectory is measured against what the repo actually records,
+    not against a possibly-dirty working tree."""
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{path}"],
+                             capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, FileNotFoundError,
+            json.JSONDecodeError):
+        return None
+
+
+def flatten_bench_times(doc, prefix: str = "") -> dict:
+    """All positive ``us_*`` leaves of a BENCH json, keyed by their
+    path (dict keys / list indices joined with '.')."""
+    out = {}
+    if isinstance(doc, dict):
+        for key, v in doc.items():
+            if isinstance(v, (dict, list)):
+                out.update(flatten_bench_times(v, f"{prefix}{key}."))
+            elif (isinstance(v, (int, float)) and not isinstance(v, bool)
+                  and key.startswith("us_") and v > 0):
+                out[f"{prefix}{key}"] = float(v)
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            out.update(flatten_bench_times(v, f"{prefix}{i}."))
+    return out
+
+
+def bench_regression(old_doc, new_doc, fail_ratio: float = 1.25):
+    """Regression delta between two BENCH jsons.
+
+    Returns (median_ratio, per_key_ratios, ok): the per-key new/old
+    ratios of every ``us_*`` field present in both documents, their
+    median (the window statistic — a single noisy config can't fail the
+    gate, a broad slowdown does), and ok = median <= fail_ratio.
+    (None, {}, True) when there is nothing to compare.
+    """
+    old = flatten_bench_times(old_doc) if old_doc else {}
+    new = flatten_bench_times(new_doc) if new_doc else {}
+    ratios = {key: new[key] / old[key] for key in sorted(old) if key in new}
+    if not ratios:
+        return None, {}, True
+    med = float(np.median(list(ratios.values())))
+    return med, ratios, med <= fail_ratio
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:

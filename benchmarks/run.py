@@ -61,7 +61,41 @@ def main() -> int:
             failed.append(name)
             traceback.print_exc()
             _report(f"{name}/FAILED", 0.0, repr(e))
+            continue
+        if not _check_regression(name, mod):
+            failed.append(name)
     return 1 if failed else 0
+
+
+def _check_regression(name: str, mod, fail_ratio: float = 1.25) -> bool:
+    """Compare the module's freshly written BENCH file against the last
+    committed version (median new/old ratio over all shared ``us_*``
+    fields).  A median slowdown beyond ``fail_ratio`` fails the run —
+    the perf trajectory is a gate, not a snapshot.  Modules without a
+    ``BENCH_FILE``, or files with no committed baseline yet, pass."""
+    import json
+
+    from benchmarks.common import bench_regression, load_committed_bench
+
+    bench_file = getattr(mod, "BENCH_FILE", None)
+    if bench_file is None:
+        return True
+    old = load_committed_bench(bench_file)
+    try:
+        with open(bench_file) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return True
+    med, ratios, ok = bench_regression(old, new, fail_ratio)
+    if med is None:
+        _report(f"{name}/regression", 0.0, "no committed baseline")
+        return True
+    worst_key = max(ratios, key=ratios.get)
+    _report(f"{name}/regression", 0.0,
+            f"median={med:.2f}x over {len(ratios)} fields vs HEAD:"
+            f"{bench_file} worst={worst_key}@{ratios[worst_key]:.2f}x "
+            f"{'ok' if ok else f'FAIL(>{fail_ratio}x)'}")
+    return ok
 
 
 if __name__ == "__main__":

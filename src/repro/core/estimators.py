@@ -80,6 +80,8 @@ def predict_classes(meta_probs: jnp.ndarray, table: jnp.ndarray,
 
 def predict_topk(meta_probs: jnp.ndarray, table: jnp.ndarray, k: int,
                  estimator: str = "unbiased", *,
+                 candidate_mode=None,
+                 inverted: Optional[jnp.ndarray] = None,
                  use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -88,11 +90,17 @@ def predict_topk(meta_probs: jnp.ndarray, table: jnp.ndarray, k: int,
     meta_probs: (R, ..., B) — same layout as the other estimators here.
     Routes to the fused streaming kernel when available (TPU, or forced
     with ``use_pallas=True``), which never materializes the (..., K)
-    score matrix; otherwise the reference gather above.  Returns
+    score matrix; otherwise the blocked streaming fallback.  Returns
     ((..., k) f32, (..., k) int32).
+
+    ``candidate_mode``: None | "exact" stream all K classes; an (m, t)
+    tuple routes through the count-min candidate filter (requires
+    ``inverted``, the (R·B, L) table from ``hashing.inverted_table``) —
+    cost independent of K, top-k approximate (see ops.mach_topk).
     """
     from repro.kernels import ops  # deferred: kernels sit above core
     return ops.mach_topk(jnp.moveaxis(meta_probs, 0, -2), table,
                          num_classes=table.shape[-1], k=k,
-                         estimator=estimator, use_pallas=use_pallas,
+                         estimator=estimator, candidate_mode=candidate_mode,
+                         inverted=inverted, use_pallas=use_pallas,
                          interpret=interpret)

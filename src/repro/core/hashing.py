@@ -154,6 +154,46 @@ class MultShiftFamily:
 import jax  # noqa: E402
 
 
+def inverted_table_np(table: np.ndarray, num_buckets: int,
+                      pad_to: int = 128) -> np.ndarray:
+    """Invert an (R, K) bucket table into (R·B, L) class lists.
+
+    Row ``j*B + b`` lists, in ascending class id, every class c with
+    ``table[j, c] == b``, padded with the sentinel ``K`` to L = the max
+    bucket occupancy rounded up to ``pad_to`` (lane alignment for the
+    candidate-decode kernels).  Built once per model host-side; the
+    candidate filter gathers rows of this table instead of streaming K.
+    """
+    table = np.asarray(table)
+    if table.ndim != 2:
+        raise ValueError(f"table must be (R, K), got {table.shape}")
+    r, k = table.shape
+    b = num_buckets
+    if table.size and (table.min() < 0 or table.max() >= b):
+        raise ValueError("table entries out of range for num_buckets")
+    counts = np.zeros((r, b), dtype=np.int64)
+    for j in range(r):
+        counts[j] = np.bincount(table[j], minlength=b)
+    occ = int(counts.max()) if counts.size else 0
+    ell = max(pad_to, -(-occ // pad_to) * pad_to)
+    inv = np.full((r * b, ell), k, dtype=np.int32)
+    cls = np.arange(k, dtype=np.int64)
+    for j in range(r):
+        # stable sort by bucket keeps each bucket's classes ascending
+        order = np.argsort(table[j], kind="stable")
+        starts = np.searchsorted(table[j][order], np.arange(b))
+        pos = cls - starts[table[j][order]]  # slot within its bucket
+        inv[j * b + table[j][order], pos] = order
+    return inv
+
+
+def inverted_table(table, num_buckets: int, pad_to: int = 128) -> jnp.ndarray:
+    """Device-side (R·B, L) int32 inverted table (see inverted_table_np)."""
+    return jnp.asarray(
+        inverted_table_np(np.asarray(table), num_buckets, pad_to),
+        dtype=jnp.int32)
+
+
 # the known hash-family kinds — ``MACHConfig`` validates against this
 # at construction so a typo fails fast, not later in make_hash_family
 HASH_KINDS = ("auto", "carter_wegman", "mult_shift")

@@ -77,6 +77,15 @@ class MACHConfig:
         """(...,) class ids -> (R, ...) bucket ids."""
         return self.family.hash_labels(labels, self.num_classes)
 
+    def inverted_table_np(self, pad_to: int = 128) -> np.ndarray:
+        """(R·B, L) bucket -> class lists for candidate-filtered decode."""
+        return hashing.inverted_table_np(self.table_np(), self.num_buckets,
+                                         pad_to)
+
+    def inverted_table(self, pad_to: int = 128) -> jnp.ndarray:
+        return hashing.inverted_table(self.table_np(), self.num_buckets,
+                                      pad_to)
+
     # --- theory (paper §3.1) ---
     def indistinguishable_bound(self) -> float:
         return hashing.indistinguishable_pair_bound(
@@ -198,10 +207,27 @@ class MACHHead(abc.ABC):
         return mach_meta_probs(self.head_logits(params, inputs))
 
     def predict(self, params: dict, inputs: Any,
-                estimator: Optional[str] = None) -> jnp.ndarray:
-        table = self.cfg.table()
-        return est.predict_classes(self.meta_probs(params, inputs), table,
-                                   estimator or self.cfg.estimator)
+                estimator: Optional[str] = None,
+                candidate_mode=None,
+                inverted: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """argmax-class prediction (Algorithm 2).
+
+        ``candidate_mode``: None | "exact" score all K classes; an
+        (m, t) tuple routes through the count-min candidate filter —
+        cost independent of K.  ``inverted`` is the table from
+        ``cfg.inverted_table()`` (built here when omitted — pass it
+        explicitly under jit, construction is host-side).
+        """
+        name = estimator or self.cfg.estimator
+        meta = self.meta_probs(params, inputs)
+        if candidate_mode is not None and candidate_mode != "exact":
+            if inverted is None:
+                inverted = self.cfg.inverted_table()
+            _, idx = est.predict_topk(meta, self.cfg.table(), 1, name,
+                                      candidate_mode=candidate_mode,
+                                      inverted=inverted)
+            return idx[..., 0]
+        return est.predict_classes(meta, self.cfg.table(), name)
 
     def class_probs(self, params: dict, inputs: Any,
                     estimator: Optional[str] = None) -> jnp.ndarray:

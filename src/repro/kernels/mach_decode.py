@@ -112,24 +112,61 @@ def _decode_body(num_classes, bn, bk, r, b, shift,
                  val_out, idx_out)
 
 
+def decode_tile_bytes(bn: int, bk: int, rb: int, *, r: int = 0,
+                      estimator: str = "unbiased", kcap: int = 0) -> int:
+    """VMEM bytes one (bn, bk) decode tile needs, per estimator.
+
+    Always: P tile (bn, R·B) f32 + on-the-fly multi-hot M (R·B, bk) f32.
+    min/median additionally keep the per-repetition score cube
+    (R, bn, bk) f32 alive until the reduce (one matmul per repetition
+    instead of one over the flattened R·B axis).  ``kcap`` > 0 accounts
+    for the streaming top-k merge state: running (val, idx) pairs of
+    width kcap plus the sorted (bn, 2·kcap) concat temporaries.
+    """
+    nbytes = 4 * (bn * rb + rb * bk)
+    if estimator in ("min", "median"):
+        nbytes += 4 * r * bn * bk
+    if kcap:
+        nbytes += 4 * 2 * bn * (kcap + 2 * kcap)
+    return nbytes
+
+
 def choose_decode_blocks(n: int, rb: int,
                          block_n: Optional[int] = None,
                          block_k: Optional[int] = None,
-                         vmem_budget: int = 6 * 2**20) -> tuple[int, int]:
-    """Pick (bn, bk): P tile (bn·RB·4 B) + M tile (RB·bk·4 B) within budget,
-    bk a multiple of 128 (lane width) for MXU alignment.
+                         vmem_budget: int = 6 * 2**20,
+                         *, r: int = 0, estimator: str = "unbiased",
+                         kcap: int = 0) -> tuple[int, int]:
+    """Pick (bn, bk) so ``decode_tile_bytes`` fits in ``vmem_budget``,
+    bk a multiple of 128 (lane width) for MXU alignment, first-fit
+    descending from 2048.
 
     bn is rounded up to a multiple of 8 (the fp32 sublane tile) whatever
     the caller passes — an odd ``block_n`` would otherwise produce a
     padded N that bn does not tile cleanly on TPU.  The kernels pad N up
-    to the returned bn, so any bn/bk combination stays correct."""
+    to the returned bn, so any bn/bk combination stays correct.
+
+    Raises ValueError when even the (bn, 128) floor tile overflows the
+    budget — the caller should shrink bn/kcap or raise the budget
+    explicitly rather than silently overflow VMEM (an explicit
+    ``block_k`` skips the accounting entirely).
+    """
     bn = block_n or min(128, max(8, n))
     bn = max(8, round_up(bn, 8))
-    if block_k is None:
-        bk = (vmem_budget // (4 * rb)) // 128 * 128
-        bk = int(min(max(bk, 128), 2048))
-    else:
-        bk = block_k
+    if block_k is not None:
+        return bn, block_k
+    bk = 2048
+    while bk > 128 and decode_tile_bytes(
+            bn, bk, rb, r=r, estimator=estimator, kcap=kcap) > vmem_budget:
+        bk -= 128
+    bk = max(bk, kcap and round_up(kcap, 128))
+    if decode_tile_bytes(bn, bk, rb, r=r, estimator=estimator,
+                         kcap=kcap) > vmem_budget:
+        raise ValueError(
+            f"decode tile does not fit: bn={bn} bk={bk} rb={rb} r={r} "
+            f"estimator={estimator!r} kcap={kcap} needs "
+            f"{decode_tile_bytes(bn, bk, rb, r=r, estimator=estimator, kcap=kcap)}"
+            f" bytes > vmem_budget={vmem_budget}; pass block_k to override")
     return bn, bk
 
 

@@ -110,10 +110,18 @@ def _topk_body(num_classes, bn, bk, r, b, kcap, estimator, inline_shift,
 
     blk_val, blk_pos = jax.lax.top_k(scores, kcap)
     blk_idx = kbase + blk_pos.astype(jnp.int32)
-    new_val, new_idx = _merge_topk(run_val[...], run_idx[...],
-                                   blk_val, blk_idx, kcap)
-    run_val[...] = new_val
-    run_idx[...] = new_idx
+
+    # Merge only when some block entry can displace a kept one.  Ties
+    # resolve to the running set (lower class ids, stable run-first
+    # merge), so skipping on <= is exact — and most K blocks of a
+    # selective decode never beat the running floor, making the skip the
+    # common case.
+    @pl.when(jnp.max(blk_val) > jnp.min(run_val[...]))
+    def _merge():
+        new_val, new_idx = _merge_topk(run_val[...], run_idx[...],
+                                       blk_val, blk_idx, kcap)
+        run_val[...] = new_val
+        run_idx[...] = new_idx
 
     @pl.when(kblk == nk - 1)
     def _flush():
@@ -149,13 +157,11 @@ def mach_topk_pallas(meta_probs: jnp.ndarray,
                          f"num_classes={num_classes}")
     rb = r * b
     kcap = round_up(k, _LANE)            # lane-aligned running capacity
-    bn, bk = choose_decode_blocks(n, rb, block_n, block_k)
-    if estimator != "unbiased" and block_k is None:
-        # min/median also hold the (R, bn, bk) gathered tensor in VMEM
-        # alongside the (R·B, bk) multi-hot — shrink bk so both fit
-        # (choose_decode_blocks budgets the unbiased path only).
-        bk_est = (6 * 2**20 // (4 * (rb + r * bn))) // _LANE * _LANE
-        bk = int(min(bk, max(bk_est, _LANE)))
+    # estimator-aware tile accounting: min/median also hold the
+    # (R, bn, bk) gathered tensor in VMEM alongside the (R·B, bk)
+    # multi-hot, and the merge scratch scales with kcap.
+    bn, bk = choose_decode_blocks(n, rb, block_n, block_k,
+                                  r=r, estimator=estimator, kcap=kcap)
     bk = max(round_up(bk, _LANE), kcap)  # block top_k needs bk >= kcap
     k_grid = pl.cdiv(num_classes, bk)
     probs2d, npad, hash_arg, hash_spec, shift = prepare_decode_operands(

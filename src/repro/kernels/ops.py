@@ -17,12 +17,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.mach_candidates import (mach_candidate_topk,
+                                           mach_candidate_topk_pallas)
 from repro.kernels.mach_decode import mach_decode_pallas
 from repro.kernels.mach_fused_xent import (mach_fused_xent_pallas,
                                            mach_fused_xent_sparse_pallas)
 from repro.kernels.mach_topk import mach_topk_pallas
 from repro.kernels.mach_xent import mach_xent_pallas
 from repro.kernels.lru_scan import lru_scan_pallas
+
+# candidate_mode values accepted by mach_topk: None (streaming), the
+# string "exact" (streaming, spelled as a knob setting), or an (m, t)
+# tuple routing through the count-min candidate filter.
+CANDIDATE_EXACT = "exact"
 
 
 def _on_tpu() -> bool:
@@ -83,6 +90,53 @@ def mach_top1(meta_probs: jnp.ndarray,
     return val.reshape(lead), idx.reshape(lead)
 
 
+def _blocked_topk_fallback(flat: jnp.ndarray, table: jnp.ndarray, k: int,
+                           estimator: str, block_k: int = 8192
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming CPU top-k: scan K in blocks, gather (R, N, bk) per
+    block, reduce, merge into a running top-k with a stable run-first
+    sort (ties keep the lowest class id, matching lax.top_k on the full
+    matrix — and the kernel's merge).  Replaces the full-matrix
+    reference fallback whose one (R, N, K) gather + (N, K) top_k was
+    the K=50k benchmark cliff; memory stays O(N·(R·bk + k)).
+    """
+    n, r, b = flat.shape
+    num_classes = table.shape[1]
+    bk = max(block_k, k)
+    nb = -(-num_classes // bk)
+    tpad = jnp.pad(table, ((0, 0), (0, nb * bk - num_classes)))
+    meta = jnp.moveaxis(flat.astype(jnp.float32), 1, 0)        # (R, N, B)
+    blocks = tpad.reshape(r, nb, bk).transpose(1, 0, 2)        # (nb, R, bk)
+
+    def body(carry, blk):
+        rv, ri, base = carry
+        tb, kbase = blk
+        g = jnp.take_along_axis(meta, tb[:, None, :].astype(jnp.int32),
+                                axis=-1)                       # (R, N, bk)
+        if estimator == "unbiased":
+            s = jnp.mean(g, axis=0)      # affine Eq. 2 map applied at the end
+        elif estimator == "min":
+            s = jnp.min(g, axis=0)
+        else:
+            s = jnp.median(g, axis=0)
+        gidx = kbase + jnp.arange(bk, dtype=jnp.int32)
+        s = jnp.where(gidx[None, :] < num_classes, s, -jnp.inf)
+        bv, bp = jax.lax.top_k(s, k)
+        cv = jnp.concatenate([rv, bv], axis=-1)
+        ci = jnp.concatenate([ri, kbase + bp.astype(jnp.int32)], axis=-1)
+        nv, ni = jax.lax.sort((-cv, ci), dimension=-1, is_stable=True,
+                              num_keys=1)
+        return (-nv[:, :k], ni[:, :k], base), None
+
+    init = (jnp.full((n, k), -jnp.inf, jnp.float32),
+            jnp.zeros((n, k), jnp.int32), 0)
+    kbases = jnp.arange(nb, dtype=jnp.int32) * bk
+    (val, idx, _), _ = jax.lax.scan(body, init, (blocks, kbases))
+    if estimator == "unbiased":
+        val = (b / (b - 1.0)) * (val - 1.0 / b)
+    return val, idx
+
+
 def mach_topk(meta_probs: jnp.ndarray,
               table: Optional[jnp.ndarray] = None,
               *,
@@ -91,6 +145,8 @@ def mach_topk(meta_probs: jnp.ndarray,
               estimator: str = "unbiased",
               inline_coeffs: Optional[jnp.ndarray] = None,
               inline_shift: Optional[int] = None,
+              candidate_mode=None,
+              inverted: Optional[jnp.ndarray] = None,
               use_pallas: Optional[bool] = None,
               interpret: Optional[bool] = None
               ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -101,8 +157,24 @@ def mach_topk(meta_probs: jnp.ndarray,
     estimator's scale, matching ``estimate_class_probs`` + ``lax.top_k``
     up to tie order.  The Pallas path streams a running top-k across K
     blocks in VMEM and never materializes the (batch, K) score matrix;
-    the fallback is the reference gather (which does — CPU only).
+    the fallback streams K in blocked gathers under a lax.scan (same
+    semantics, bounded memory).
+
+    ``candidate_mode`` selects the decode algorithm: ``None`` or
+    ``"exact"`` stream all K classes; an ``(m, t)`` tuple routes
+    through the count-min candidate filter (``mach_topk_candidates`` —
+    requires ``inverted``, the table from ``hashing.inverted_table``),
+    whose cost is independent of K but whose top-k is approximate
+    (filtered slots come back as (-inf, -1); recall is measured by
+    ``benchmarks/bench_decode_topk.py``).
     """
+    if candidate_mode is not None and candidate_mode != CANDIDATE_EXACT:
+        m, t = candidate_mode
+        return mach_topk_candidates(
+            meta_probs, table, inverted=inverted, num_classes=num_classes,
+            k=k, m=m, t=t, estimator=estimator, inline_coeffs=inline_coeffs,
+            inline_shift=inline_shift, use_pallas=use_pallas,
+            interpret=interpret)
     if not 1 <= k <= num_classes:
         raise ValueError(f"need 1 <= k <= num_classes, got k={k}, "
                          f"num_classes={num_classes}")
@@ -120,7 +192,64 @@ def mach_topk(meta_probs: jnp.ndarray,
         if table is None:
             table = _table_from_inline(inline_coeffs, inline_shift,
                                        num_classes)
-        val, idx = ref.mach_topk_ref(flat, table, k, estimator)
+        # Small problems: one fused (R, N, K) gather + full top_k beats
+        # the scan's per-block dispatch overhead (measured: n=8, K=50k
+        # runs 1.4x slower blocked).  Large ones: blocking is what
+        # removed the K=50k n=32 cliff and bounds memory at K >= 1M.
+        if flat.shape[0] * num_classes * r <= 2**24:
+            val, idx = ref.mach_topk_ref(flat, table, k, estimator)
+        else:
+            val, idx = _blocked_topk_fallback(flat, table, k, estimator)
+    return val.reshape(lead + (k,)), idx.reshape(lead + (k,))
+
+
+def mach_topk_candidates(meta_probs: jnp.ndarray,
+                         table: Optional[jnp.ndarray] = None,
+                         *,
+                         inverted: jnp.ndarray,
+                         num_classes: int,
+                         k: int,
+                         m: int,
+                         t: int = 1,
+                         estimator: str = "unbiased",
+                         inline_coeffs: Optional[jnp.ndarray] = None,
+                         inline_shift: Optional[int] = None,
+                         compact_cap: int = 2048,
+                         use_pallas: Optional[bool] = None,
+                         interpret: Optional[bool] = None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidate-filtered top-k: count-min filter over the per-repetition
+    bucket top-m, then gather+score only the candidates.
+
+    meta_probs: (..., R, B) — leading dims flattened internally;
+    ``inverted`` is the (R·B, L) bucket->class table from
+    ``hashing.inverted_table`` (built once per model).  Returns
+    (values, indices) shaped (..., k); slots beyond the surviving
+    candidates are (-inf, -1), and a row with no count>=t candidate
+    backfills slot 0 with its best count>=1 candidate so serving never
+    sees an empty row.  With m = B, t = R the result is exact (equal to
+    the streaming path up to tie order).  Cost is O(R·B·log m +
+    R·m·L·R) — independent of K.
+
+    The fused Pallas pipeline needs inline multiply-shift hashing (it
+    recomputes buckets in-register); in table mode the pure-jnp path
+    runs regardless of ``use_pallas``.
+    """
+    lead = meta_probs.shape[:-2]
+    r, b = meta_probs.shape[-2:]
+    flat = meta_probs.reshape((-1, r, b))
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use and inline_coeffs is not None and inline_shift is not None:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        val, idx = mach_candidate_topk_pallas(
+            flat, inverted, num_classes=num_classes, k=k, m=m, t=t,
+            estimator=estimator, inline_coeffs=inline_coeffs,
+            inline_shift=inline_shift, interpret=interp)
+    else:
+        val, idx = mach_candidate_topk(
+            flat, inverted, table, num_classes=num_classes, k=k, m=m, t=t,
+            estimator=estimator, inline_coeffs=inline_coeffs,
+            inline_shift=inline_shift, compact_cap=compact_cap)
     return val.reshape(lead + (k,)), idx.reshape(lead + (k,))
 
 
@@ -323,6 +452,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
 ORACLES: dict = {
     "mach_top1": "mach_decode_ref",
     "mach_topk": "mach_topk_ref",
+    "mach_topk_candidates": "mach_candidate_topk_ref",
     "mach_scores": "mach_scores_ref",
     "mach_xent": "mach_xent_ref",
     "mach_fused_xent": "mach_fused_xent_ref",

@@ -69,6 +69,41 @@ def mach_topk_ref(meta_probs: jnp.ndarray, table: jnp.ndarray, k: int,
     return val.astype(jnp.float32), idx.astype(jnp.int32)
 
 
+def mach_candidate_topk_ref(meta_probs: jnp.ndarray, table: jnp.ndarray,
+                            k: int, m: int, t: int = 1,
+                            estimator: str = "unbiased"
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Brute-force candidate-filtered top-k — the oracle for
+    ``mach_topk_candidates``.
+
+    Semantics: a class is a *candidate* iff its bucket value is >= the
+    m-th largest bucket value (i.e. its bucket is in the top-m) in at
+    least t of the R repetitions; the top-k ranks candidates by the
+    estimator score.  Filtered slots come back as (-inf, -1); a row
+    with no count>=t candidate backfills slot 0 with its best count>=1
+    candidate.  Materializes the (N, K) membership and score matrices
+    by design — the production paths never do.
+    """
+    n, r, b = meta_probs.shape
+    meta = meta_probs.astype(jnp.float32)
+    scores = mach_estimator_scores_ref(meta, table, estimator)    # (N, K)
+    tau = jnp.min(jax.lax.top_k(meta, m)[0], axis=-1)             # (N, R)
+    g = jnp.moveaxis(jnp.take_along_axis(
+        jnp.moveaxis(meta, 1, 0), table[:, None, :], axis=-1), 0, -1)
+    count = jnp.sum(g >= tau[:, None, :], axis=-1)                # (N, K)
+    val, idx = jax.lax.top_k(jnp.where(count >= t, scores, -jnp.inf), k)
+    idx = idx.astype(jnp.int32)
+    if t > 1:
+        s1 = jnp.where(count >= 1, scores, -jnp.inf)
+        v1 = jnp.max(s1, axis=-1)
+        i1 = jnp.argmax(s1, axis=-1).astype(jnp.int32)
+        fill = (val[:, 0] == -jnp.inf) & (v1 > -jnp.inf)
+        val = val.at[:, 0].set(jnp.where(fill, v1, val[:, 0]))
+        idx = idx.at[:, 0].set(jnp.where(fill, i1, idx[:, 0]))
+    idx = jnp.where(val == -jnp.inf, -1, idx)
+    return val.astype(jnp.float32), idx
+
+
 # ---------------------------------------------------------------------------
 # MACH fused cross-entropy (training loss, Algorithm 1).
 # ---------------------------------------------------------------------------

@@ -292,13 +292,26 @@ class LanguageModel:
         val = jnp.max(logits, axis=-1)
         return idx, val
 
+    def mach_inverted_table(self):
+        """Cached (R·B, L) inverted bucket->class table (candidate-
+        filtered decode).  Built host-side once per model instance."""
+        if getattr(self, "_mach_inverted", None) is None:
+            self._mach_inverted = self.cfg.mach.inverted_table()
+        return self._mach_inverted
+
     def topk_scores(self, params, hidden: jnp.ndarray, k: int,
-                    estimator: Optional[str] = None):
+                    estimator: Optional[str] = None,
+                    candidate_mode=None):
         """Top-k (values, class ids) from final hidden states (B, d).
 
         MACH path: the fused streaming top-k kernel — the (B, V) score
         matrix is never materialized; values are on the configured
-        estimator's scale.  OAA path: plain ``lax.top_k`` over logits."""
+        estimator's scale.  OAA path: plain ``lax.top_k`` over logits.
+
+        ``candidate_mode``: None | "exact" stream all V classes; an
+        (m, t) tuple routes through the count-min candidate filter
+        (cost independent of V; filtered slots come back (-inf, -1)).
+        Ignored on the OAA path."""
         cfg = self.cfg
         if cfg.mach is None:
             scores = self.oaa_logits(params, hidden).astype(jnp.float32)
@@ -307,29 +320,36 @@ class LanguageModel:
         probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         est = estimator or cfg.mach.estimator
         fam = cfg.mach.family
+        filtered = candidate_mode is not None and candidate_mode != "exact"
+        kw = dict(candidate_mode=candidate_mode,
+                  inverted=self.mach_inverted_table() if filtered else None)
         if getattr(fam, "inline_kernel_ok", False):
             return ops.mach_topk(
                 probs, num_classes=cfg.vocab_size, k=k, estimator=est,
                 inline_coeffs=jnp.asarray(fam.coeffs()),
-                inline_shift=fam.shift)
+                inline_shift=fam.shift, **kw)
         return ops.mach_topk(probs, cfg.mach.table(),
-                             num_classes=cfg.vocab_size, k=k, estimator=est)
+                             num_classes=cfg.vocab_size, k=k, estimator=est,
+                             **kw)
 
     def topk_candidates(self, params, hidden: jnp.ndarray, top_k: int,
-                        estimator: Optional[str] = None):
+                        estimator: Optional[str] = None,
+                        candidate_mode=None):
         """Top-k sampling candidates (vals, idxs), each (B, top_k), on
         the *sampling* scale.
 
         MACH path: the fused streaming top-k over the requested
         estimator (Eq. 2/7/8) — no (B, V) tensor exists anywhere on this
-        path.  For the unbiased estimator the values are rescaled back
-        to the summed-score scale (Eq. 2's affine map would otherwise
-        multiply the effective temperature by ~R), preserving the
-        historical softmax(Σ_r scores / T) semantics exactly; min/median
-        sample on their own scale."""
+        path — or, with an (m, t) ``candidate_mode``, the count-min
+        candidate filter (cost independent of V).  For the unbiased
+        estimator the values are rescaled back to the summed-score scale
+        (Eq. 2's affine map would otherwise multiply the effective
+        temperature by ~R), preserving the historical
+        softmax(Σ_r scores / T) semantics exactly; min/median sample on
+        their own scale."""
         cfg = self.cfg
-        vals, idxs = self.topk_scores(params, hidden, top_k,
-                                      estimator)                # (B, k)
+        vals, idxs = self.topk_scores(params, hidden, top_k, estimator,
+                                      candidate_mode)           # (B, k)
         if cfg.mach is not None:
             est = estimator or cfg.mach.estimator
             if est == "unbiased":

@@ -166,13 +166,19 @@ class ServeConfig:
     top_k: int = 50               # fused-kernel candidate cap (static)
     seed: int = 0
     scheduler: str = "continuous"  # "continuous" | "lockstep" (baseline)
+    # decode algorithm: None | "exact" stream all V classes; an (m, t)
+    # tuple routes every serve step through the count-min candidate
+    # filter (cost independent of V — see ops.mach_topk_candidates).
+    # MACH models only; ignored on the OAA path.
+    candidate_mode: Optional[object] = None
 
 
 # ---------------------------------------------------------------------------
 # The unified serve step
 # ---------------------------------------------------------------------------
 
-def make_serve_step_fn(model: LanguageModel, top_k: int):
+def make_serve_step_fn(model: LanguageModel, top_k: int,
+                       candidate_mode=None):
     """One jitted step for both phases of serving.
 
     ``caches=None`` selects prefill: ``batch["tokens"]`` is the (1, L)
@@ -205,7 +211,8 @@ def make_serve_step_fn(model: LanguageModel, top_k: int):
             caches, h = model.decode_step(params, caches, enc_kvs,
                                           batch["tokens"][:, 0], pos,
                                           per_slot=True)
-        cands = [model.topk_candidates(params, h, top_k, est)
+        cands = [model.topk_candidates(params, h, top_k, est,
+                                       candidate_mode=candidate_mode)
                  for est in estimators]
         if len(cands) == 1:
             vals, idxs = cands[0]
@@ -284,8 +291,19 @@ class ServingEngine:
         # num_slots × max_len cache every token (prefill passes None there
         # — donating an empty pytree is a no-op); _insert/_reset donate
         # the pool for the same reason
+        cm = scfg.candidate_mode
+        if cm is not None and cm != "exact":
+            try:
+                m, t = cm
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"ServeConfig.candidate_mode must be None, 'exact' or "
+                    f"an (m, t) tuple, got {cm!r}")
+            if getattr(model.cfg, "mach", None) is not None:
+                # build the inverted table once, outside any trace
+                model.mach_inverted_table()
         self._serve_step = jax.jit(
-            make_serve_step_fn(model, scfg.top_k),
+            make_serve_step_fn(model, scfg.top_k, scfg.candidate_mode),
             static_argnames=("estimators", "max_len"),
             donate_argnums=(1, 2))
         self._insert = jax.jit(model.insert_cache_slot, donate_argnums=(0,))

@@ -1,0 +1,339 @@
+"""Candidate-filtered decode: count-min filter + fused filter->gather->
+score path vs the streaming oracle.
+
+Covers the inverted-table construction, exactness at (m=B, t=R) and of
+the "exact" knob, jnp-vs-Pallas-interpret parity, the count-min
+semantics against the brute-force oracle, t-backfill behavior, recall
+monotonicity in (m, t), the no-(n, K)-tensor jaxpr gate, dispatch
+threading (ops -> estimators -> MACHHead), and the benchmark
+regression-delta gate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MACHConfig
+from repro.core.estimators import predict_topk
+from repro.core.hashing import inverted_table, inverted_table_np
+from repro.kernels import ops, ref
+from repro.kernels.mach_candidates import (bucket_topm, bucket_topm_pallas,
+                                           mach_candidate_topk,
+                                           mach_candidate_topk_pallas)
+
+ESTIMATORS = ("unbiased", "min", "median")
+
+
+def _probs(key, n, r, b, dtype=jnp.float32):
+    return jax.nn.softmax(
+        jax.random.normal(jax.random.key(key), (n, r, b)), -1).astype(dtype)
+
+
+def _assert_values_match(cand_v, oracle_v, rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(np.asarray(cand_v), np.asarray(oracle_v),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# inverted table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,k,b,r", [("carter_wegman", 1000, 32, 8),
+                                        ("mult_shift", 512, 16, 4)])
+def test_inverted_table_partition(kind, k, b, r):
+    """Each repetition's rows partition [K]: every class appears exactly
+    once, in its own bucket's row, ascending, sentinel-padded, with L a
+    lane multiple."""
+    cfg = MACHConfig(k, b, r, hash_kind=kind)
+    tab = cfg.table_np()
+    inv = inverted_table_np(tab, b)
+    rb, ell = inv.shape
+    assert rb == r * b and ell % 128 == 0
+    for j in range(r):
+        seen = []
+        for bb in range(b):
+            row = inv[j * b + bb]
+            real = row[row < k]
+            assert np.all(np.diff(real) > 0)          # ascending class ids
+            assert np.all(tab[j][real] == bb)         # right bucket
+            assert np.all(row[len(real):] == k)       # sentinel tail
+            seen.extend(real.tolist())
+        assert sorted(seen) == list(range(k))
+
+
+def test_inverted_table_config_accessor():
+    cfg = MACHConfig(300, 8, 3)
+    np.testing.assert_array_equal(
+        np.asarray(cfg.inverted_table()),
+        inverted_table_np(cfg.table_np(), 8))
+
+
+def test_inverted_table_validation():
+    with pytest.raises(ValueError):
+        inverted_table_np(np.zeros((3, 4, 5), np.int32), 8)
+    with pytest.raises(ValueError):
+        inverted_table_np(np.full((2, 10), 9, np.int32), 8)  # bucket >= B
+
+
+# ---------------------------------------------------------------------------
+# bucket top-m
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 5, 16])
+def test_bucket_topm_pallas_matches_jnp(m):
+    probs = _probs(3, 7, 6, 16)      # odd/ragged n
+    t1, i1 = bucket_topm(probs, m)
+    t2, i2 = bucket_topm_pallas(probs, m, interpret=True)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ---------------------------------------------------------------------------
+# exactness: full top-m + t = R  ==  streaming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("estimator", ESTIMATORS)
+@pytest.mark.parametrize("mode", ["table", "inline"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_full_topm_tR_matches_streaming(estimator, mode, dtype):
+    k_cls, b, r, n, k = 1000, 32, 8, 7, 10     # ragged n
+    kind = "mult_shift" if mode == "inline" else "carter_wegman"
+    cfg = MACHConfig(k_cls, b, r, hash_kind=kind)
+    tab = cfg.table()
+    inv = inverted_table(cfg.table_np(), b)
+    probs = _probs(k_cls + n, n, r, b, dtype)
+    p32 = probs.astype(jnp.float32)
+    rv, ri = ref.mach_topk_ref(p32, tab, k, estimator)
+    if mode == "inline":
+        fam = cfg.family
+        cv, ci = mach_candidate_topk(
+            p32, inv, num_classes=k_cls, k=k, m=b, t=r, estimator=estimator,
+            inline_coeffs=jnp.asarray(fam.coeffs()), inline_shift=fam.shift)
+    else:
+        cv, ci = mach_candidate_topk(p32, inv, tab, num_classes=k_cls, k=k,
+                                     m=b, t=r, estimator=estimator)
+    _assert_values_match(cv, rv)
+    # indices match up to tie order: scores at candidate ids == values
+    if not np.array_equal(np.asarray(ci), np.asarray(ri)):
+        sc = np.asarray(ref.mach_estimator_scores_ref(p32, tab, estimator))
+        np.testing.assert_allclose(
+            sc[np.arange(n)[:, None], np.asarray(ci)], np.asarray(rv),
+            rtol=1e-5, atol=1e-6)
+    # no duplicate classes in any row
+    for i in range(n):
+        assert len(set(np.asarray(ci)[i].tolist())) == k
+
+
+def test_exact_knob_is_bit_identical_to_streaming():
+    cfg = MACHConfig(500, 16, 4)
+    tab = cfg.table()
+    probs = _probs(0, 5, 4, 16)
+    sv, si = ops.mach_topk(probs, tab, num_classes=500, k=6,
+                           use_pallas=False)
+    ev, ei = ops.mach_topk(probs, tab, num_classes=500, k=6,
+                           candidate_mode="exact", use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ei))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(ev))
+
+
+# ---------------------------------------------------------------------------
+# jnp vs Pallas-interpret parity, and both vs the brute-force oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("estimator", ESTIMATORS)
+@pytest.mark.parametrize("m,t", [(4, 1), (6, 2), (32, 8)])
+def test_kernel_vs_jnp_vs_oracle(estimator, m, t):
+    k_cls, b, r, n, k = 1000, 32, 8, 5, 9
+    cfg = MACHConfig(k_cls, b, r, hash_kind="mult_shift")
+    fam = cfg.family
+    tab = cfg.table()
+    inv = inverted_table(cfg.table_np(), b)
+    co, sh = jnp.asarray(fam.coeffs()), fam.shift
+    probs = _probs(2, n, r, b)
+    ov, oi = ref.mach_candidate_topk_ref(probs, tab, k, m, t, estimator)
+    jv, ji = mach_candidate_topk(probs, inv, num_classes=k_cls, k=k, m=m,
+                                 t=t, estimator=estimator, inline_coeffs=co,
+                                 inline_shift=sh)
+    pv, pi = mach_candidate_topk_pallas(probs, inv, num_classes=k_cls, k=k,
+                                        m=m, t=t, estimator=estimator,
+                                        inline_coeffs=co, inline_shift=sh,
+                                        interpret=True)
+    _assert_values_match(jv, ov)
+    _assert_values_match(pv, ov)
+    # filtered slots agree exactly (value -inf, id -1)
+    dead = np.asarray(jv) == -np.inf
+    np.testing.assert_array_equal(np.asarray(ji)[dead],
+                                  np.full(int(dead.sum()), -1))
+    np.testing.assert_array_equal(dead, np.asarray(pv) == -np.inf)
+
+
+def test_backfill_row_with_no_t_survivor():
+    """With t=R and tiny m, rows whose oracle top class doesn't land in
+    every repetition's top-m still return their best count>=1 candidate
+    in slot 0 (the serving never-empty guarantee)."""
+    k_cls, b, r, n, k = 2000, 16, 6, 8, 5
+    cfg = MACHConfig(k_cls, b, r, hash_kind="mult_shift")
+    fam = cfg.family
+    tab = cfg.table()
+    inv = inverted_table(cfg.table_np(), b)
+    probs = _probs(11, n, r, b)      # flat-random: t=R survivors are rare
+    ov, oi = ref.mach_candidate_topk_ref(probs, tab, k, 1, r)
+    cv, ci = mach_candidate_topk(probs, inv, num_classes=k_cls, k=k, m=1,
+                                 t=r, inline_coeffs=jnp.asarray(fam.coeffs()),
+                                 inline_shift=fam.shift)
+    _assert_values_match(cv, ov)
+    cv, ci = np.asarray(cv), np.asarray(ci)
+    assert np.all(cv[:, 0] > -np.inf)          # slot 0 never empty
+    assert np.all(ci[:, 0] >= 0)
+    assert np.any(cv == -np.inf)               # the filter did filter
+    np.testing.assert_array_equal(ci[cv == -np.inf], -1)
+
+
+# ---------------------------------------------------------------------------
+# recall monotonicity in (m, t)
+# ---------------------------------------------------------------------------
+
+def _recall_at(probs, tab, inv, cfg, m, t, k=10):
+    fam = cfg.family
+    _, si = ref.mach_topk_ref(probs, tab, k)
+    _, ci = mach_candidate_topk(probs, inv, num_classes=cfg.num_classes,
+                                k=k, m=m, t=t,
+                                inline_coeffs=jnp.asarray(fam.coeffs()),
+                                inline_shift=fam.shift)
+    si, ci = np.asarray(si), np.asarray(ci)
+    return np.mean([len(set(ci[i]) & set(si[i])) / k
+                    for i in range(si.shape[0])])
+
+
+def test_recall_monotone_in_m_and_t():
+    """The candidate set grows with m and shrinks with t, and any oracle
+    top-k class inside the set survives to the filtered top-k — so
+    recall@k is non-decreasing in m and non-increasing in t, exactly."""
+    k_cls, b, r, n = 3000, 32, 6, 12
+    cfg = MACHConfig(k_cls, b, r, hash_kind="mult_shift")
+    tab = cfg.table()
+    inv = inverted_table(cfg.table_np(), b)
+    probs = _probs(23, n, r, b)
+    rec_m = [_recall_at(probs, tab, inv, cfg, m, 1) for m in (1, 2, 4, 8, 32)]
+    assert all(a <= b_ + 1e-12 for a, b_ in zip(rec_m, rec_m[1:])), rec_m
+    assert rec_m[-1] == 1.0                   # m=B, t=1 covers everything
+    rec_t = [_recall_at(probs, tab, inv, cfg, 4, t) for t in (1, 2, 4, 6)]
+    assert all(a >= b_ - 1e-12 for a, b_ in zip(rec_t, rec_t[1:])), rec_t
+
+
+# ---------------------------------------------------------------------------
+# jaxpr gate: no (n, K) tensor on the filtered path
+# ---------------------------------------------------------------------------
+
+def test_no_nK_tensor_on_filtered_path():
+    from benchmarks.common import intermediate_avals
+    # B large enough that the candidate pool (R*m*L, with L ~ K/B times
+    # hash skew) stays well under K — the pool is the intended working
+    # set; what must never appear is a K-sized axis.
+    k_cls, b, r, n, k = 200_000, 512, 4, 8, 10
+    cfg = MACHConfig(k_cls, b, r, hash_kind="mult_shift")
+    fam = cfg.family
+    inv = inverted_table(cfg.table_np(), b)
+    probs = _probs(1, n, r, b)
+
+    def filtered(p, iv):
+        return ops.mach_topk_candidates(
+            p, inverted=iv, num_classes=k_cls, k=k, m=4, t=1,
+            inline_coeffs=jnp.asarray(fam.coeffs()), inline_shift=fam.shift,
+            use_pallas=False)
+
+    jaxpr = jax.make_jaxpr(filtered)(probs, inv).jaxpr
+    bad = [tuple(a.shape) for a in intermediate_avals(jaxpr)
+           if a.shape and max(a.shape) >= k_cls]
+    assert not bad, f"(n, K)-scale tensors on the filtered path: {bad}"
+
+
+# ---------------------------------------------------------------------------
+# dispatch threading: ops -> estimators -> MACHHead
+# ---------------------------------------------------------------------------
+
+def test_ops_mach_topk_candidate_mode_dispatch():
+    k_cls, b, r = 1000, 32, 8
+    cfg = MACHConfig(k_cls, b, r, hash_kind="mult_shift")
+    tab = cfg.table()
+    inv = inverted_table(cfg.table_np(), b)
+    probs = _probs(4, 6, r, b).reshape(2, 3, r, b)    # leading dims
+    ov, oi = ref.mach_candidate_topk_ref(probs.reshape(6, r, b), tab, 5,
+                                         6, 2)
+    cv, ci = ops.mach_topk(probs, tab, num_classes=k_cls, k=5,
+                           candidate_mode=(6, 2), inverted=inv,
+                           use_pallas=False)
+    assert cv.shape == (2, 3, 5) and ci.shape == (2, 3, 5)
+    _assert_values_match(cv.reshape(6, 5), ov)
+
+
+def test_predict_topk_and_head_candidate_mode():
+    from repro.core import MACHLinear
+    from repro.core.mach import mach_meta_probs
+    k_cls, b, r = 600, 16, 5
+    cfg = MACHConfig(k_cls, b, r, hash_kind="mult_shift")
+    tab = cfg.table()
+    inv = inverted_table(cfg.table_np(), b)
+    logits = jax.random.normal(jax.random.key(6), (9, r, b))
+    meta = mach_meta_probs(logits)                    # (R, N, B)
+    sv, si = predict_topk(meta, tab, 4, "unbiased", use_pallas=False)
+    cv, ci = predict_topk(meta, tab, 4, "unbiased",
+                          candidate_mode=(b, r), inverted=inv,
+                          use_pallas=False)
+    _assert_values_match(cv, sv)
+
+    head = MACHLinear(cfg, dim=12)
+    params = head.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (7, 12))
+    full = head.predict(params, x)
+    cand = head.predict(params, x, candidate_mode=(b, r), inverted=inv)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(cand))
+
+
+def test_candidate_validation():
+    cfg = MACHConfig(100, 16, 2, hash_kind="mult_shift")
+    inv = inverted_table(cfg.table_np(), 16)
+    probs = _probs(0, 2, 2, 16)
+    fam = cfg.family
+    kw = dict(inline_coeffs=jnp.asarray(fam.coeffs()),
+              inline_shift=fam.shift)
+    for bad in [dict(k=0, m=4, t=1), dict(k=5, m=0, t=1),
+                dict(k=5, m=17, t=1), dict(k=5, m=4, t=3),
+                dict(k=5, m=4, t=1, estimator="mode")]:
+        with pytest.raises(ValueError):
+            mach_candidate_topk(probs, inv, num_classes=100,
+                                **{**kw, **bad})
+    with pytest.raises(ValueError):
+        mach_candidate_topk(probs, inv, num_classes=100, k=5, m=4, t=1)
+
+
+# ---------------------------------------------------------------------------
+# benchmark regression gate
+# ---------------------------------------------------------------------------
+
+def test_bench_regression_delta():
+    from benchmarks.common import bench_regression, flatten_bench_times
+    old = {"configs": [{"K": 1, "us_ref": 100.0, "us_fused": 50.0},
+                       {"K": 2, "us_ref": 200.0, "us_fused": 80.0}],
+           "gate": {"rows": [{"us_stream": 1000.0, "us_filtered": 100.0}]},
+           "verified": True, "us_zero": 0.0}
+    flat = flatten_bench_times(old)
+    assert set(flat) == {"configs.0.us_ref", "configs.0.us_fused",
+                         "configs.1.us_ref", "configs.1.us_fused",
+                         "gate.rows.0.us_stream", "gate.rows.0.us_filtered"}
+    med, ratios, ok = bench_regression(old, old)
+    assert med == 1.0 and ok and len(ratios) == 6
+    # one noisy outlier doesn't fail the median-of-window gate
+    new = {**old, "configs": [{"K": 1, "us_ref": 300.0, "us_fused": 50.0},
+                              old["configs"][1]]}
+    med, _, ok = bench_regression(old, new)
+    assert ok and med == 1.0
+    # a broad slowdown does
+    slow = {"configs": [{"K": 1, "us_ref": 150.0, "us_fused": 75.0},
+                        {"K": 2, "us_ref": 300.0, "us_fused": 120.0}],
+            "gate": {"rows": [{"us_stream": 1500.0, "us_filtered": 150.0}]}}
+    med, _, ok = bench_regression(old, slow)
+    assert not ok and med == pytest.approx(1.5)
+    # no baseline -> pass
+    assert bench_regression(None, old) == (None, {}, True)

@@ -157,6 +157,43 @@ def test_choose_decode_blocks_rounds_bn():
         assert bk % 128 == 0
 
 
+def test_choose_decode_blocks_budget_sweep():
+    """Explicit tile-byte accounting: over a sweep of VMEM budgets and
+    estimator / kcap configurations the chosen tile always fits, bk is
+    lane-aligned, min/median never pick a wider bk than unbiased at the
+    same budget (their per-repetition score cube is accounted), and the
+    floor tile overflowing raises instead of silently clamping."""
+    from repro.kernels.mach_decode import decode_tile_bytes
+    rb, r, n = 8 * 128, 8, 8
+    for budget in (4 * 2**20, 6 * 2**20, 16 * 2**20):
+        bks = {}
+        for est in ("unbiased", "min", "median"):
+            for kcap in (0, 128, 512):
+                bn, bk = choose_decode_blocks(
+                    n, rb, vmem_budget=budget, r=r, estimator=est,
+                    kcap=kcap)
+                assert bk % 128 == 0 and bk >= 128
+                assert decode_tile_bytes(bn, bk, rb, r=r, estimator=est,
+                                         kcap=kcap) <= budget
+                assert bk >= kcap       # merge needs a kcap-wide block
+                bks[est, kcap] = bk
+        for kcap in (0, 128, 512):
+            assert bks["min", kcap] <= bks["unbiased", kcap]
+            assert bks["median", kcap] == bks["min", kcap]
+    # larger budget -> never narrower tiles
+    widths = [choose_decode_blocks(n, rb, vmem_budget=bud, r=r,
+                                   estimator="min")[1]
+              for bud in (4 * 2**20, 6 * 2**20, 32 * 2**20)]
+    assert widths == sorted(widths)
+    # floor overflow is an error, not a silent VMEM blowout ...
+    with pytest.raises(ValueError):
+        choose_decode_blocks(n, rb, vmem_budget=2**18, r=r,
+                             estimator="min")
+    # ... unless the caller takes responsibility with an explicit block_k
+    assert choose_decode_blocks(32, rb, None, 256,
+                                vmem_budget=2**18) == (32, 256)
+
+
 @pytest.mark.parametrize("block_n", [5, 13])
 def test_decode_padding_path_odd_block_n(block_n):
     """N not divisible by (rounded) bn AND K not divisible by bk stays
