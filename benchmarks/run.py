@@ -13,9 +13,12 @@ Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
   bench_sparse_xent fused CSR projection+CE vs densified reference —
                     the ODP sparse-feature path (also writes
                     BENCH_sparse.json)
-  bench_serve       continuous (slot) vs lockstep serving scheduler on
-                    a Zipf ragged workload (also writes
-                    BENCH_serve.json)
+  bench_serve       serving suite on Zipf ragged workloads: continuous
+                    (slot) vs lockstep scheduler, paged KV pool vs
+                    contiguous strips at equal HBM (4× slots + exact
+                    parity + no-max_len-strip jaxpr gate), and
+                    sustained Poisson traffic (p50/p99 latency ticks,
+                    tokens/step) — also writes BENCH_serve.json
   roofline          §Roofline aggregation from the dry-run artifacts
 """
 

@@ -10,8 +10,10 @@ the moment they finish and queued requests are admitted into it — watch
 ``metrics.occupancy`` stay high even though the workload is ragged.
 
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --page-size 16  # paged KV pool
 """
 
+import argparse
 import time
 
 import jax
@@ -23,11 +25,22 @@ from repro.serving import Request, SamplingParams, ServeConfig, ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (0: contiguous "
+                         "per-slot strips)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="shared KV page-pool size (0: derive "
+                         "slots * ceil(max_len / page_size))")
+    args = ap.parse_args()
+    # paged demo swaps the local-attention block (its O(window) ring
+    # cache never pages) for full attention so the page pool carries KV
+    attn_kind = "attn" if args.page_size else "attn_local"
     cfg = ModelConfig(
         name="serve-demo", family="hybrid",
         num_layers=6, d_model=256, num_heads=4, num_kv_heads=1,
         d_ff=512, vocab_size=4096,
-        block_pattern=("rglru", "rglru", "attn_local"), local_window=64,
+        block_pattern=("rglru", "rglru", attn_kind), local_window=64,
         rnn_width=256, activation="geglu",
         mach=MACHConfig(4096, 256, 6),
         dtype=jnp.float32, scan_layers=False, remat="none",
@@ -40,7 +53,9 @@ def main():
 
     engine = ServingEngine(model, params,
                            ServeConfig(max_len=128, num_slots=4,
-                                       max_new_tokens=16))
+                                       max_new_tokens=16,
+                                       page_size=args.page_size,
+                                       num_pages=args.num_pages))
     prompts = [
         [12, 99, 1034, 7],
         [5, 6],
@@ -65,6 +80,10 @@ def main():
           f"{dt:.1f}s ({m.tokens_generated/dt:.1f} tok/s on CPU, greedy, "
           f"{m.decode_steps} decode steps over 4 slots, "
           f"occupancy {m.occupancy:.2f})")
+    if args.page_size:
+        print(f"page pool: {m.num_pages} pages x {args.page_size} tokens, "
+              f"peak {m.pages_peak} reserved, "
+              f"{m.reservation_failures} reservation stalls")
 
     # sampled decoding: per-request temperature/top-k/seed, still on the
     # fused streaming top-k path (no (batch, V) tensor anywhere) — an
@@ -73,7 +92,8 @@ def main():
     sampler = ServingEngine(model, params,
                             ServeConfig(max_len=128, num_slots=4,
                                         max_new_tokens=16, top_k=16,
-                                        seed=0))
+                                        seed=0, page_size=args.page_size,
+                                        num_pages=args.num_pages))
     for i, p in enumerate(prompts[:4]):
         sampler.submit(Request(
             prompt=p,

@@ -183,7 +183,8 @@ def _train_cfg_for(cfg, global_batch: int, mesh) -> TrainConfig:
 
 def lower_cell(arch: str, shape: str, multi_pod: bool,
                fsdp: bool = True, sp: Optional[bool] = None,
-               mach: str = "auto", save_hlo: bool = False) -> CellResult:
+               mach: str = "auto", save_hlo: bool = False,
+               page_size: int = 0, num_pages: int = 0) -> CellResult:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     cfg = get_config(arch, mach=mach)
     ok, reason = shape_applicable(cfg, shape)
@@ -214,7 +215,8 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
         elif kind == "prefill":
             lowered = _lower_prefill(model, cfg, mesh, rules, spec)
         else:
-            lowered = _lower_decode(model, cfg, mesh, rules, spec)
+            lowered = _lower_decode(model, cfg, mesh, rules, spec,
+                                    page_size=page_size, num_pages=num_pages)
         compiled = lowered.compile()
 
     ma = compiled.memory_analysis()
@@ -383,10 +385,18 @@ def _lower_prefill(model, cfg, mesh, rules, spec):
                    ).lower(params_shapes, batch_specs)
 
 
-def _lower_decode(model, cfg, mesh, rules, spec):
+def _lower_decode(model, cfg, mesh, rules, spec, page_size: int = 0,
+                  num_pages: int = 0):
     params_shapes, p_shard = _serve_param_shapes(model, cfg, mesh, rules)
     gb, s = spec["global_batch"], spec["seq_len"]
-    caches_shapes = jax.eval_shape(lambda: model.init_caches(gb, s))
+    if page_size:
+        # paged decode cell: the linear KV state is the shared page pool
+        # (num_pages × page_size tokens/layer) instead of gb × s strips
+        np_ = num_pages or gb * (-(-s // page_size))
+        caches_shapes = jax.eval_shape(
+            lambda: model.init_paged_caches(gb, s, page_size, np_))
+    else:
+        caches_shapes = jax.eval_shape(lambda: model.init_caches(gb, s))
     enc_shapes = None
     if cfg.num_encoder_layers:
         enc_out = _sds((gb, max(1, s // 4), cfg.d_model), cfg.dtype)
@@ -441,7 +451,8 @@ def run_one(args) -> int:
     res = lower_cell(args.arch, args.shape, args.multi_pod,
                      fsdp=not args.no_fsdp,
                      sp=None if args.sp == "auto" else args.sp == "on",
-                     mach=args.mach, save_hlo=args.save_hlo)
+                     mach=args.mach, save_hlo=args.save_hlo,
+                     page_size=args.page_size, num_pages=args.num_pages)
     d = os.path.join(ARTIFACT_DIR, res.mesh)
     os.makedirs(d, exist_ok=True)
     out = os.path.join(d, f"{args.arch}__{args.shape}.json")
@@ -518,6 +529,12 @@ def main() -> int:
     ap.add_argument("--sp", choices=("auto", "on", "off"), default="auto")
     ap.add_argument("--mach", choices=("auto", "on", "off"), default="auto")
     ap.add_argument("--save-hlo", action="store_true", dest="save_hlo")
+    ap.add_argument("--page-size", type=int, default=0, dest="page_size",
+                    help="decode cells: paged KV pool page size "
+                         "(0: contiguous strips)")
+    ap.add_argument("--num-pages", type=int, default=0, dest="num_pages",
+                    help="decode cells: KV pool pages (0: derive "
+                         "batch * ceil(seq_len / page_size))")
     args = ap.parse_args()
     if args.all:
         return run_all(args)

@@ -46,6 +46,12 @@ def main() -> int:
                     default=None,
                     help="per-request MACH estimator override")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (0: contiguous "
+                         "per-slot strips)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="shared KV page-pool size (0: derive "
+                         "slots * ceil(max_len / page_size))")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -68,7 +74,9 @@ def main() -> int:
                                            temperature=args.temperature,
                                            top_k=args.top_k,
                                            seed=args.seed,
-                                           scheduler=args.scheduler))
+                                           scheduler=args.scheduler,
+                                           page_size=args.page_size,
+                                           num_pages=args.num_pages))
         rng = np.random.default_rng(0)
         feats = {}
         if cfg.num_encoder_layers:
@@ -95,6 +103,10 @@ def main() -> int:
               f"{m.tokens_generated/dt:.1f} tok/s, "
               f"{m.decode_steps} decode steps, "
               f"occupancy {m.occupancy:.2f}")
+        if args.page_size:
+            print(f"page pool: {m.num_pages} pages x {args.page_size} "
+                  f"tokens, peak {m.pages_peak} reserved, "
+                  f"{m.reservation_failures} reservation stalls")
     return 0
 
 

@@ -282,3 +282,202 @@ def decode_attend(q1: jnp.ndarray, cache: KVCache, *,
     q_pos = cache.index[:, None] - 1          # position of the new token
     return attend(q1, cache.k, cache.v, q_pos, cache.positions,
                   causal=True, window=window, flash_threshold=1 << 62)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (shared page pool + per-slot page tables)
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Shared page pool with per-slot page tables.
+
+    The contiguous ``KVCache`` reserves a worst-case ``num_slots ×
+    max_len`` strip per slot; one long-context straggler dictates the
+    HBM bill for every slot.  The paged layout allocates KV in fixed
+    ``page_size``-token pages from one shared pool — a slot holds a
+    *page table* of pool indices instead of a strip, so resident memory
+    is ``num_pages × page_size`` regardless of per-slot ``max_len``.
+
+    k, v:       (num_pages, page_size, KV, hd) — the shared pool
+    positions:  (num_pages, page_size) int32 absolute positions; −1 =
+                empty or stale (freed pages keep their contents; masking
+                is entirely position-driven)
+    page_table: (num_slots, max_pages) int32 pool page ids; −1 =
+                unassigned.  Logical token p of slot s lives at pool
+                coordinate (page_table[s, p // page_size], p % page_size).
+    index:      (num_slots,) int32 next absolute write position
+
+    All geometry (page_size, num_pages, max_pages, num_slots) is
+    derivable from leaf shapes, so the pytree carries no static fields
+    and scans/jits treat it like any other cache leaf.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    positions: jnp.ndarray
+    page_table: jnp.ndarray
+    index: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def max_pages(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def num_slots(self) -> int:
+        return self.index.shape[0]
+
+
+def init_paged_cache(num_slots: int, num_pages: int, page_size: int,
+                     max_pages: int, num_kv: int, head_dim: int,
+                     dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((num_pages, page_size, num_kv, head_dim), dtype),
+        v=jnp.zeros((num_pages, page_size, num_kv, head_dim), dtype),
+        positions=jnp.full((num_pages, page_size), -1, jnp.int32),
+        page_table=jnp.full((num_slots, max_pages), -1, jnp.int32),
+        index=jnp.zeros((num_slots,), jnp.int32),
+    )
+
+
+def paged_insert_prefill(cache: PagedKVCache, one: KVCache, slot,
+                         pages: jnp.ndarray) -> PagedKVCache:
+    """Scatter a freshly prefilled batch-1 contiguous cache into the
+    pool pages reserved for ``slot``.
+
+    ``one`` must have capacity C = len(pages) · page_size (the engine
+    prefills with a page-rounded capacity); its positions carry −1
+    beyond the prompt, so the padded tail of the last page is masked
+    exactly like empty cache rows.  ``pages`` is the (n_prompt_pages,)
+    page-id vector from the allocator; the slot's table row is set to
+    those pages followed by −1 (pages appended later by the scheduler
+    on boundary crossings)."""
+    ps = cache.page_size
+    c = one.k.shape[1]
+    npg = c // ps
+    assert npg * ps == c, (c, ps)
+
+    def paginate(strip):                     # (1, C, ...) -> (npg, ps, ...)
+        return strip[0].reshape((npg, ps) + strip.shape[2:])
+
+    newk = cache.k.at[pages].set(paginate(one.k).astype(cache.k.dtype))
+    newv = cache.v.at[pages].set(paginate(one.v).astype(cache.v.dtype))
+    newp = cache.positions.at[pages].set(paginate(one.positions))
+    row = jnp.concatenate([
+        pages.astype(jnp.int32),
+        jnp.full((cache.max_pages - npg,), -1, jnp.int32)])
+    table = cache.page_table.at[slot].set(row)
+    index = cache.index.at[slot].set(one.index[0])
+    return PagedKVCache(newk, newv, newp, table, index)
+
+
+def paged_append_page(cache: PagedKVCache, slot, page_idx,
+                      page_id) -> PagedKVCache:
+    """Grow ``slot``'s table by one page (decode boundary crossing)."""
+    table = cache.page_table.at[slot, page_idx].set(
+        jnp.asarray(page_id, jnp.int32))
+    return cache._replace(page_table=table)
+
+
+def paged_reset_slot(cache: PagedKVCache, slot) -> PagedKVCache:
+    """Clear ``slot``: table row → −1, index → 0.  Page *contents* are
+    left stale on purpose — freed pages are masked by positions the
+    moment they are rewritten (prefill writes whole pages; a decode
+    write at page offset 0 rewrites the page's position row) — so
+    freeing is O(max_pages), not O(tokens)."""
+    table = cache.page_table.at[slot].set(-1)
+    index = cache.index.at[slot].set(0)
+    return cache._replace(page_table=table, index=index)
+
+
+def paged_cache_update_decode(cache: PagedKVCache, k1: jnp.ndarray,
+                              v1: jnp.ndarray) -> PagedKVCache:
+    """Insert one token per slot (k1/v1: (S, 1, KV, hd)) at each slot's
+    own (page, offset) = (table[s, idx // ps], idx % ps).
+
+    Slots whose table entry is unassigned (−1) — free slots, or slots
+    whose index ran past their table — scatter out of bounds and are
+    dropped: free-slot inertness is structural, a free slot cannot
+    touch the pool.  A write at offset 0 rewrites the page's whole
+    position row (token position at 0, −1 elsewhere), so a recycled
+    page's stale positions can never leak into the attention mask."""
+    idx = cache.index                                  # (S,)
+    ps, mp, npages = cache.page_size, cache.max_pages, cache.num_pages
+    pj = idx // ps
+    off = idx % ps
+    entry = jnp.take_along_axis(cache.page_table,
+                                jnp.minimum(pj, mp - 1)[:, None],
+                                axis=1)[:, 0]          # (S,)
+    valid = (entry >= 0) & (pj < mp)
+    page = jnp.where(valid, entry, npages)             # OOB -> dropped
+    newk = cache.k.at[page, off].set(k1[:, 0].astype(cache.k.dtype),
+                                     mode="drop")
+    newv = cache.v.at[page, off].set(v1[:, 0].astype(cache.v.dtype),
+                                     mode="drop")
+    # full position-row rewrite: stale offsets of a fresh page -> -1
+    cur = jnp.where(valid[:, None],
+                    cache.positions[jnp.where(valid, entry, 0)], -1)
+    lane = jnp.arange(ps, dtype=jnp.int32)[None]       # (1, ps)
+    row = jnp.where(lane == off[:, None], idx[:, None],
+                    jnp.where(off[:, None] == 0, -1, cur))
+    newp = cache.positions.at[page].set(row, mode="drop")
+    return PagedKVCache(newk, newv, newp, cache.page_table, idx + 1)
+
+
+def paged_decode_attend(q1: jnp.ndarray, cache: PagedKVCache, *,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token attention over a paged cache.  q1: (S, 1, H, hd).
+
+    Online-softmax scan over the page axis: each step gathers one page
+    per slot — an (S, page_size, KV, hd) tile — and folds it into a
+    running (max, denom, acc), exactly the ``_attend_flash`` recurrence
+    with pages as KV chunks.  No intermediate ever carries both the
+    slot dim and the logical max_len = max_pages · page_size dim: the
+    per-slot worst-case strip the paged layout exists to kill is never
+    materialized, not even transiently.
+
+    Unassigned table entries gather page 0 but mask its positions to
+    −1, so a slot only ever attends to its own pages."""
+    s_dim, _, h, hd = q1.shape
+    kv = cache.k.shape[2]
+    g = h // kv
+    ps, mp = cache.page_size, cache.max_pages
+    scale = 1.0 / math.sqrt(hd)
+    qg = _group(q1, kv)                                # (S, 1, KV, G, hd)
+    qc = (qg.astype(jnp.float32) * scale).astype(q1.dtype)
+    q_pos = cache.index[:, None] - 1                   # (S, 1)
+
+    def page_body(carry, j):
+        m_run, l_run, acc = carry
+        pid = cache.page_table[:, j]                   # (S,)
+        ok = pid >= 0
+        safe = jnp.where(ok, pid, 0)
+        kb = cache.k[safe]                             # (S, ps, KV, hd)
+        vb = cache.v[safe]
+        kp = jnp.where(ok[:, None], cache.positions[safe], -1)
+        s = jnp.einsum("btkgh,bskh->bkgts", qc, kb,
+                       preferred_element_type=jnp.float32)
+        s = s + _mask(q_pos, kp, True, window)         # (S, KV, G, 1, ps)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_run - m_new)
+        e = jnp.exp(s - m_new[..., None])
+        l_new = l_run * corr + jnp.sum(e, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", e.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((s_dim, kv, g, 1), NEG_INF, jnp.float32),
+            jnp.zeros((s_dim, kv, g, 1), jnp.float32),
+            jnp.zeros((s_dim, kv, g, 1, hd), jnp.float32))
+    (_, l_f, acc), _ = jax.lax.scan(page_body, init, jnp.arange(mp))
+    out = acc / jnp.maximum(l_f, 1e-37)[..., None]
+    out = jnp.where((l_f > 0)[..., None], out, 0.0)
+    out = out.transpose(0, 3, 1, 2, 4)                 # (S, 1, KV, G, hd)
+    return out.reshape(s_dim, 1, h, hd).astype(q1.dtype)

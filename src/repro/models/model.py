@@ -203,8 +203,16 @@ class LanguageModel:
         return total, metrics
 
     # --------------------------------------------------------------- serving
-    def init_caches(self, batch_size: int, max_len: int):
-        """Build the decode cache pytree mirroring the stack nesting."""
+    def init_caches(self, batch_size: int, max_len: int,
+                    linear_cap: Optional[int] = None):
+        """Build the decode cache pytree mirroring the stack nesting.
+
+        ``linear_cap`` (optional) overrides the capacity of *linear*
+        attention caches only — ring caches keep their O(window)
+        capacity and recurrent states are O(1).  The paged engine
+        prefills with ``linear_cap`` = the page-rounded prompt length so
+        the batch-1 prefill cache reshapes exactly into the slot's
+        reserved pages instead of carrying a max_len strip."""
         cfg = self.cfg
         layout = self._dec_layout()
         stacks = plan_stacks(layout)
@@ -213,11 +221,35 @@ class LanguageModel:
         for period, n in stacks:
             st = []
             for kind in period:
-                st.append(_init_kind_cache(cfg, kind, n, batch_size, max_len, hd))
+                st.append(_init_kind_cache(cfg, kind, n, batch_size, max_len,
+                                           hd, linear_cap=linear_cap))
             caches.append(st)
         return caches
 
-    def prefill(self, params, batch: dict, max_len: int):
+    def init_paged_caches(self, num_slots: int, max_len: int,
+                          page_size: int, num_pages: int):
+        """Paged decode pool: linear attention caches become one shared
+        ``(num_pages, page_size, KV, hd)`` page pool per layer with
+        per-slot page tables; ring caches (O(window)) and recurrent
+        states (O(1)) stay per-slot strips — they are not the
+        worst-case-length pathology paging exists to kill."""
+        cfg = self.cfg
+        layout = self._dec_layout()
+        stacks = plan_stacks(layout)
+        max_pages = -(-max_len // page_size)
+        paged = (num_pages, page_size, max_pages)
+        caches = []
+        hd = cfg.resolved_head_dim
+        for period, n in stacks:
+            st = []
+            for kind in period:
+                st.append(_init_kind_cache(cfg, kind, n, num_slots, max_len,
+                                           hd, paged=paged))
+            caches.append(st)
+        return caches
+
+    def prefill(self, params, batch: dict, max_len: int,
+                linear_cap: Optional[int] = None):
         """Process the prompt; returns (caches, enc_kvs, last_hidden (B, d))."""
         cfg = self.cfg
         tokens = batch["tokens"]
@@ -227,7 +259,7 @@ class LanguageModel:
             enc_out = self.encode(params, batch["enc_feats"])
             enc_kvs = self.enc_kvs(params, enc_out)
         prefix = batch.get("prefix_feats")
-        caches = self.init_caches(b, max_len)
+        caches = self.init_caches(b, max_len, linear_cap=linear_cap)
         h, caches, _ = self.hidden_states(params, tokens, prefix_emb=prefix,
                                           enc_kvs=enc_kvs, caches=caches)
         return caches, enc_kvs, h[:, -1]
@@ -263,6 +295,71 @@ class LanguageModel:
         state) so a freed slot carries nothing across requests."""
         return self.insert_cache_slot(pool, self.init_caches(1, max_len),
                                       slot)
+
+    # ------------------------------------------------------ paged slot pool
+    @staticmethod
+    def insert_cache_slot_paged(pool, one, slot, pages):
+        """Admit a batch-1 prefill cache into slot ``slot`` of a *paged*
+        pool: linear-attention leaves scatter their page-rounded strips
+        into the pool pages reserved by the allocator (``pages``, one id
+        per prompt page) and set the slot's page table row; ring /
+        recurrent leaves take the contiguous per-slot scatter."""
+        def put(p, o):
+            return jax.lax.dynamic_update_index_in_dim(p, o[:, 0], slot,
+                                                       axis=1)
+        out = []
+        for p_st, o_st in zip(pool, one):
+            row = []
+            for pc, oc in zip(p_st, o_st):
+                if isinstance(pc, attn_lib.PagedKVCache):
+                    # leaves carry a leading stacked-layers dim; the page
+                    # assignment is identical across layers
+                    row.append(jax.vmap(
+                        lambda c, o: attn_lib.paged_insert_prefill(
+                            c, o, slot, pages))(pc, oc))
+                else:
+                    row.append(jax.tree.map(put, pc, oc))
+            out.append(row)
+        return out
+
+    def reset_cache_slot_paged(self, pool, slot, max_len: int):
+        """Free slot ``slot`` of a paged pool: page-table row → −1 and
+        index → 0 on paged leaves (stale page contents stay — masking is
+        position-driven, see ``paged_reset_slot``); ring / recurrent
+        leaves are restored to their freshly initialized state."""
+        fresh = None
+        out = []
+        for si, p_st in enumerate(pool):
+            row = []
+            for pi, pc in enumerate(p_st):
+                if isinstance(pc, attn_lib.PagedKVCache):
+                    row.append(jax.vmap(
+                        lambda c: attn_lib.paged_reset_slot(c, slot))(pc))
+                else:
+                    if fresh is None:
+                        fresh = self.init_caches(1, max_len)
+                    row.append(jax.tree.map(
+                        lambda p, o: jax.lax.dynamic_update_index_in_dim(
+                            p, o[:, 0], slot, axis=1), pc, fresh[si][pi]))
+            out.append(row)
+        return out
+
+    @staticmethod
+    def append_cache_page(pool, slot, page_idx, page_id):
+        """Grow ``slot``'s page table by one pool page at table position
+        ``page_idx`` on every paged leaf (decode boundary crossing)."""
+        out = []
+        for p_st in pool:
+            row = []
+            for pc in p_st:
+                if isinstance(pc, attn_lib.PagedKVCache):
+                    row.append(jax.vmap(
+                        lambda c: attn_lib.paged_append_page(
+                            c, slot, page_idx, page_id))(pc))
+                else:
+                    row.append(pc)
+            out.append(row)
+        return out
 
     def next_token(self, params, hidden: jnp.ndarray):
         """Greedy next token from final hidden states (B, d).
@@ -410,14 +507,39 @@ class LanguageModel:
 
 
 def _init_kind_cache(cfg: ModelConfig, kind: str, n: int, batch: int,
-                     max_len: int, hd: int):
-    """Stacked (n, ...) cache for one period position."""
+                     max_len: int, hd: int,
+                     linear_cap: Optional[int] = None,
+                     paged: Optional[tuple] = None):
+    """Stacked (n, ...) cache for one period position.
+
+    ``paged`` = (num_pages, page_size, max_pages) turns *linear*
+    attention caches into a shared page pool + per-slot page tables
+    (``batch`` is then the slot count); ring caches (window < max_len)
+    keep their O(window) strips.  ``linear_cap`` (mutually exclusive in
+    practice) overrides only the linear-cache capacity — the paged
+    engine's batch-1 prefill path."""
     if kind in ("attn", "moe", "xattn", "attn_local"):
+        kv = cfg.num_kv_heads
         window = cfg.block_window(kind)
-        cap = min(max_len, window) if window else max_len
+        ring = window is not None and window < max_len
+        if not ring and paged is not None:
+            num_pages, page_size, max_pages = paged
+            return attn_lib.PagedKVCache(
+                k=jnp.zeros((n, num_pages, page_size, kv, hd), cfg.dtype),
+                v=jnp.zeros((n, num_pages, page_size, kv, hd), cfg.dtype),
+                positions=jnp.full((n, num_pages, page_size), -1, jnp.int32),
+                page_table=jnp.full((n, batch, max_pages), -1, jnp.int32),
+                index=jnp.zeros((n, batch), jnp.int32),
+            )
+        if ring:
+            cap = window
+        else:
+            cap = linear_cap if linear_cap else max_len
+            if window is not None:
+                cap = min(cap, window)
         return attn_lib.KVCache(
-            k=jnp.zeros((n, batch, cap, cfg.num_kv_heads, hd), cfg.dtype),
-            v=jnp.zeros((n, batch, cap, cfg.num_kv_heads, hd), cfg.dtype),
+            k=jnp.zeros((n, batch, cap, kv, hd), cfg.dtype),
+            v=jnp.zeros((n, batch, cap, kv, hd), cfg.dtype),
             positions=jnp.full((n, batch, cap), -1, jnp.int32),
             index=jnp.zeros((n, batch), jnp.int32),
         )

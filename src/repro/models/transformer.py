@@ -198,6 +198,15 @@ def _self_attention(params, cfg: ModelConfig, x, positions, window,
                               flash_threshold=cfg.flash_threshold,
                               chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
         new_cache = None
+    elif isinstance(cache, attn_lib.PagedKVCache):   # paged slot decode
+        if x.shape[1] > 1:
+            raise NotImplementedError(
+                "paged caches decode one token per slot; prefill goes "
+                "through a batch-1 contiguous cache that the engine "
+                "scatters into reserved pages (chunked paged prefill is "
+                "a future admission policy)")
+        new_cache = attn_lib.paged_cache_update_decode(cache, k, v)
+        out = attn_lib.paged_decode_attend(q, new_cache, window=window)
     elif x.shape[1] > 1:                      # prefill into cache
         new_cache = attn_lib.cache_update_prefill(cache, k, v, positions)
         out = attn_lib.attend(q, k, v, positions, positions, causal=causal,

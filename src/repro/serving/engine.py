@@ -143,6 +143,13 @@ class EngineMetrics:
     tokens_generated: int = 0     # real request tokens (free slots excluded)
     completed: int = 0
     live_slot_steps: int = 0      # Σ over decode calls of producing slots
+    peak_live_slots: int = 0      # max concurrently occupied slots
+    # page-pool gauges (paged engines only; zero on the contiguous path)
+    num_pages: int = 0            # pool size (0 = contiguous/strip layout)
+    pages_in_use: int = 0         # pages allocated+written by live slots now
+    pages_reserved: int = 0       # reserved now (incl. not yet written)
+    pages_peak: int = 0           # max pages_reserved over the lifetime
+    reservation_failures: int = 0  # admission ticks deferred for lack of pages
 
     @property
     def occupancy(self) -> float:
@@ -155,10 +162,16 @@ class EngineMetrics:
         return (self.tokens_generated / self.decode_steps
                 if self.decode_steps else 0.0)
 
+    @property
+    def fragmentation(self) -> int:
+        """Reserved − written pages: the internal fragmentation of the
+        worst-case (prompt + max_new) reservations held right now."""
+        return self.pages_reserved - self.pages_in_use
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    max_len: int = 2048           # per-slot cache capacity
+    max_len: int = 2048           # per-request token cap (page-table span)
     num_slots: int = 8            # fixed decode-pool width
     max_new_tokens: int = 64      # default per-request cap
     eos_id: int = -1              # -1: never stop early
@@ -166,11 +179,25 @@ class ServeConfig:
     top_k: int = 50               # fused-kernel candidate cap (static)
     seed: int = 0
     scheduler: str = "continuous"  # "continuous" | "lockstep" (baseline)
+    # paged KV cache: page_size > 0 switches the linear KV caches from
+    # per-slot (num_slots, max_len) strips to one shared
+    # (num_pages, page_size) pool with per-slot page tables — resident
+    # KV HBM becomes num_pages × page_size tokens per layer regardless
+    # of max_len, so num_slots can grow at fixed memory.  num_pages = 0
+    # derives num_slots × ceil(max_len / page_size) (byte-equivalent to
+    # the contiguous layout).  page_size = 0 keeps the contiguous strip
+    # layout (required by scheduler="lockstep").
+    page_size: int = 0
+    num_pages: int = 0
     # decode algorithm: None | "exact" stream all V classes; an (m, t)
     # tuple routes every serve step through the count-min candidate
     # filter (cost independent of V — see ops.mach_topk_candidates).
     # MACH models only; ignored on the OAA path.
     candidate_mode: Optional[object] = None
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size > 0
 
 
 # ---------------------------------------------------------------------------
@@ -204,9 +231,14 @@ def make_serve_step_fn(model: LanguageModel, top_k: int,
 
     def serve_step(params, caches, enc_kvs, batch, pos, key, salts,
                    tok_idx, temps, row_k, est_sel, *,
-                   estimators: tuple, max_len: int):
+                   estimators: tuple, max_len: int,
+                   linear_cap: Optional[int] = None):
         if caches is None:                       # ---- prefill (batch 1)
-            caches, enc_kvs, h = model.prefill(params, batch, max_len)
+            # linear_cap (paged engines): cap the batch-1 linear caches
+            # at the prompt's page-rounded length so the strip reshapes
+            # exactly into the reserved pool pages at insert time
+            caches, enc_kvs, h = model.prefill(params, batch, max_len,
+                                               linear_cap=linear_cap)
         else:                                    # ---- pooled decode step
             caches, h = model.decode_step(params, caches, enc_kvs,
                                           batch["tokens"][:, 0], pos,
@@ -251,6 +283,8 @@ class _Slot:
     submit_step: int
     first_token_step: int
     done: bool = False            # lockstep only: finished, slot held
+    pages: list = dataclasses.field(default_factory=list)  # pool page ids
+    reserved: int = 0             # worst-case pages reserved at admission
 
 
 class ServingEngine:
@@ -283,6 +317,16 @@ class ServingEngine:
             # silently degrade to ε-greedy rather than erroring
             raise ValueError(f"ServeConfig.temperature must be > 0 (or "
                              f"None for greedy), got {scfg.temperature}")
+        if scfg.page_size < 0 or scfg.num_pages < 0:
+            raise ValueError("ServeConfig.page_size / num_pages must be >= 0")
+        if scfg.num_pages and not scfg.page_size:
+            raise ValueError("ServeConfig.num_pages requires page_size > 0")
+        if scfg.paged and scfg.scheduler == "lockstep":
+            # the lockstep ablation is the contiguous-strip baseline by
+            # definition — keeping it on KVCache strips is what makes it
+            # a layout ablation rather than a second paged scheduler
+            raise ValueError("scheduler='lockstep' runs on the contiguous "
+                             "cache layout; unset page_size for lockstep")
         self.model = model
         self.params = params
         self.scfg = scfg
@@ -304,7 +348,7 @@ class ServingEngine:
                 model.mach_inverted_table()
         self._serve_step = jax.jit(
             make_serve_step_fn(model, scfg.top_k, scfg.candidate_mode),
-            static_argnames=("estimators", "max_len"),
+            static_argnames=("estimators", "max_len", "linear_cap"),
             donate_argnums=(1, 2))
         self._insert = jax.jit(model.insert_cache_slot, donate_argnums=(0,))
         self._reset = jax.jit(model.reset_cache_slot,
@@ -312,14 +356,51 @@ class ServingEngine:
                               donate_argnums=(0,))
         self._key = jax.random.key(scfg.seed)
         # the fixed slot pool — allocated once, reused for every request
-        self._pool = model.init_caches(scfg.num_slots, scfg.max_len)
+        if scfg.paged:
+            ps = scfg.page_size
+            self._max_pages = -(-scfg.max_len // ps)
+            num_pages = scfg.num_pages or scfg.num_slots * self._max_pages
+            self._num_pages = num_pages
+            self._pool = model.init_paged_caches(
+                scfg.num_slots, scfg.max_len, ps, num_pages)
+            # deterministic FIFO free list: pages come back in the order
+            # they were freed, so allocation is a pure function of the
+            # request sequence (alloc/free/reuse determinism tests)
+            self._free_pages: collections.deque = collections.deque(
+                range(num_pages))
+            self._insert_paged = jax.jit(model.insert_cache_slot_paged,
+                                         donate_argnums=(0,))
+            self._reset_paged = jax.jit(model.reset_cache_slot_paged,
+                                        static_argnames=("max_len",),
+                                        donate_argnums=(0,))
+            # slot/page_idx/page_id ride as traced scalars: one trace
+            # covers every boundary crossing
+            self._append = jax.jit(model.append_cache_page,
+                                   donate_argnums=(0,))
+        else:
+            self._num_pages = 0
+            self._pool = model.init_caches(scfg.num_slots, scfg.max_len)
         self._enc_pool = None        # lazily shaped from the first request
         self._slots: list = [None] * scfg.num_slots
         self._queue: collections.deque = collections.deque()
         self._next_id = 0
         self._tick = 0               # scheduler ticks (latency unit)
         self._enc_shape = None       # pinned (S, F) across requests
-        self.metrics = EngineMetrics(num_slots=scfg.num_slots)
+        self.metrics = EngineMetrics(num_slots=scfg.num_slots,
+                                     num_pages=self._num_pages)
+
+    def __repr__(self) -> str:
+        m = self.metrics
+        live = sum(s is not None for s in self._slots)
+        body = (f"slots={live}/{self.scfg.num_slots} "
+                f"queue={len(self._queue)} tick={self._tick} "
+                f"completed={m.completed}")
+        if self.scfg.paged:
+            body += (f" pages={m.pages_in_use}/{self._num_pages}"
+                     f" reserved={m.pages_reserved}"
+                     f" frag={m.fragmentation} peak={m.pages_peak}"
+                     f" resv_fail={m.reservation_failures}")
+        return f"<ServingEngine {body}>"
 
     # ------------------------------------------------------------- submit
     @property
@@ -360,6 +441,15 @@ class ServingEngine:
                 f"prompt ({prefix + len(prompt)} tokens incl. prefix) + "
                 f"max_new_tokens ({max_new}) exceeds the slot capacity "
                 f"ServeConfig.max_len={scfg.max_len}")
+        if scfg.paged:
+            need = self._pages_for(prefix + len(prompt) + max_new - 1)
+            if need > self._num_pages:
+                # can never be satisfied even by an empty pool — reject
+                # now instead of blocking the queue head forever
+                raise ValueError(
+                    f"request needs {need} pages (worst case) but the "
+                    f"pool holds {self._num_pages}; raise "
+                    f"ServeConfig.num_pages or page_size")
         self._validate_feats(request)
         rid = self._next_id
         self._next_id += 1
@@ -441,6 +531,26 @@ class ServingEngine:
                 return i
         return None
 
+    # ------------------------------------------------------ page allocator
+    def _pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.scfg.page_size)
+
+    def _alloc_pages(self, n: int) -> list:
+        """Pop ``n`` page ids FIFO; caller must have reserved them."""
+        assert len(self._free_pages) >= n, (len(self._free_pages), n)
+        ids = [self._free_pages.popleft() for _ in range(n)]
+        self.metrics.pages_in_use += n
+        return ids
+
+    def _release_pages(self, slot: _Slot) -> None:
+        """Return a finished slot's pages (FIFO) and drop its worst-case
+        reservation — the next admission sees them immediately."""
+        self._free_pages.extend(slot.pages)
+        self.metrics.pages_in_use -= len(slot.pages)
+        self.metrics.pages_reserved -= slot.reserved
+        slot.pages = []
+        slot.reserved = 0
+
     def _finish(self, slot: _Slot, reason: str) -> GenerationResult:
         self.metrics.completed += 1
         return GenerationResult(
@@ -457,23 +567,47 @@ class ServingEngine:
             slot_i = self._free_slot()
             if slot_i is None:
                 return
-            rid, req, max_new, submit_step = self._queue.popleft()
+            rid, req, max_new, submit_step = self._queue[0]   # peek
+            prefix = (self.model.cfg.num_prefix_tokens
+                      if req.prefix_feats is not None else 0)
+            need, pages, linear_cap = 0, [], None
+            if scfg.paged:
+                # reserve worst-case (prompt + max_new, page-rounded) up
+                # front so a mid-decode boundary crossing can never find
+                # the pool empty; only the prompt pages are allocated now
+                need = self._pages_for(prefix + len(req.prompt)
+                                       + max_new - 1)
+                if need > self._num_pages - self.metrics.pages_reserved:
+                    # backpressure: the head of the queue waits (FIFO —
+                    # no later, smaller request jumps it) until EOS
+                    # returns enough pages
+                    self.metrics.reservation_failures += 1
+                    return
+            self._queue.popleft()
             temp, row_k, est = self._row_knobs(req)
             salt = _prng_salt(req.sampling.seed, rid)
             batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
-            prefix = 0
             if req.enc_feats is not None:
                 batch["enc_feats"] = jnp.asarray(req.enc_feats)[None]
             if req.prefix_feats is not None:
                 batch["prefix_feats"] = jnp.asarray(req.prefix_feats)[None]
-                prefix = self.model.cfg.num_prefix_tokens
+            if scfg.paged:
+                self.metrics.pages_reserved += need
+                self.metrics.pages_peak = max(self.metrics.pages_peak,
+                                              self.metrics.pages_reserved)
+                pages = self._alloc_pages(
+                    self._pages_for(prefix + len(req.prompt)))
+                # page-rounded prefill capacity: the batch-1 linear
+                # strips reshape exactly into the reserved pages
+                linear_cap = len(pages) * scfg.page_size
             one = lambda v, dt: jnp.asarray([v], dt)       # noqa: E731
             caches, enc_kvs, ids = self._serve_step(
                 self.params, None, None, batch,
                 one(0, jnp.int32), self._key, one(salt, jnp.int32),
                 one(0, jnp.int32), one(temp, jnp.float32),
                 one(row_k, jnp.int32), one(0, jnp.int32),
-                estimators=(est,), max_len=scfg.max_len)
+                estimators=(est,), max_len=scfg.max_len,
+                linear_cap=linear_cap)
             self.metrics.prefills += 1
             tok = int(ids[0])
             self.metrics.tokens_generated += 1
@@ -483,14 +617,22 @@ class ServingEngine:
                          pos=prefix + len(req.prompt), temp=temp,
                          row_k=row_k, est=est, max_new=max_new,
                          submit_step=submit_step,
-                         first_token_step=self._tick)
+                         first_token_step=self._tick,
+                         pages=pages, reserved=need)
             if (scfg.eos_id >= 0 and tok == scfg.eos_id) or max_new == 1:
                 # finished at prefill — the slot is never occupied
+                if scfg.paged:
+                    self._release_pages(slot)
                 reason = "eos" if (scfg.eos_id >= 0
                                    and tok == scfg.eos_id) else "length"
                 finished.append(self._finish(slot, reason))
                 continue
-            self._pool = self._insert(self._pool, caches, slot_i)
+            if scfg.paged:
+                self._pool = self._insert_paged(
+                    self._pool, caches, slot_i,
+                    jnp.asarray(slot.pages, jnp.int32))
+            else:
+                self._pool = self._insert(self._pool, caches, slot_i)
             if enc_kvs is not None:
                 if self._enc_pool is None:
                     self._enc_pool = jax.tree.map(
@@ -506,6 +648,23 @@ class ServingEngine:
         live = [s for s in self._slots if s is not None and not s.done]
         if not live:
             return
+        self.metrics.peak_live_slots = max(self.metrics.peak_live_slots,
+                                           len(live))
+        if scfg.paged:
+            # lazy page append: a slot whose next write crosses a page
+            # boundary gets its next reserved page now.  The reservation
+            # made at admission guarantees the free list is never empty
+            # here.
+            for i, s in enumerate(self._slots):
+                if s is None or s.done:
+                    continue
+                pj = s.pos // scfg.page_size
+                if pj >= len(s.pages):
+                    (pid,) = self._alloc_pages(1)
+                    s.pages.append(pid)
+                    self._pool = self._append(
+                        self._pool, jnp.int32(i), jnp.int32(pj),
+                        jnp.int32(pid))
         estimators = tuple(sorted({s.est for s in live}))
         n = scfg.num_slots
         toks = np.zeros((n, 1), np.int32)
@@ -557,8 +716,13 @@ class ServingEngine:
             finished.append(self._finish(s, reason))
             if scfg.scheduler == "continuous":
                 # free immediately: next tick admits into this slot
-                self._pool = self._reset(self._pool, i,
-                                         max_len=scfg.max_len)
+                if scfg.paged:
+                    self._release_pages(s)
+                    self._pool = self._reset_paged(self._pool, i,
+                                                   max_len=scfg.max_len)
+                else:
+                    self._pool = self._reset(self._pool, i,
+                                             max_len=scfg.max_len)
                 self._slots[i] = None
             else:
                 s.done = True            # lockstep: hold until chunk drains

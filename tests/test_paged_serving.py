@@ -1,0 +1,337 @@
+"""Paged KV cache: page pool math, allocator, and engine invariants.
+
+The contiguous slot engine's theorems (exact greedy parity with solo
+decode, free-slot inertness, per-request PRNG independence of slot /
+page / admission order) must all survive the paged refactor, plus the
+paged-only properties: deterministic alloc/free/reuse, no page aliasing
+across live requests, reservation backpressure (queue, never crash),
+and stale-contents masking on recycled pages.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import intermediate_avals
+from repro.core.mach import MACHConfig
+from repro.kernels import ops
+from repro.models import LanguageModel, ModelConfig
+from repro.models import attention as attn_lib
+from repro.serving import Request, SamplingParams, ServeConfig, ServingEngine
+from repro.serving.engine import make_serve_step_fn
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = ModelConfig(name="srv-paged", num_layers=2, d_model=48,
+                      num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=200,
+                      dtype=jnp.float32, mach=MACHConfig(200, 16, 4))
+    model = LanguageModel(cfg)
+    params, _ = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_new_tokens", 6)
+    kw.setdefault("page_size", 4)
+    return ServingEngine(model, params, ServeConfig(**kw))
+
+
+def _run(model, params, reqs, **kw):
+    eng = _engine(model, params, **kw)
+    for r in reqs:
+        eng.submit(r)
+    return [list(r.tokens) for r in eng.run()], eng
+
+
+RAGGED = [([1, 2, 3], 6), ([4, 5], 2), ([6, 7, 8, 9], 6), ([10], 2),
+          ([11, 12, 13, 14, 15, 16, 17], 8), ([18, 19], 4)]
+
+
+# ---------------------------------------------------------------------------
+# pool math units (no engine)
+# ---------------------------------------------------------------------------
+
+def _toy_contiguous(cap=8, prompt_len=6, seed=0):
+    """Batch-1 contiguous cache as the engine's prefill would build it."""
+    kv, hd = 2, 8
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((1, cap, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, cap, kv, hd)), jnp.float32)
+    pos = jnp.where(jnp.arange(cap) < prompt_len, jnp.arange(cap), -1)[None]
+    return attn_lib.KVCache(k=k, v=v, positions=pos.astype(jnp.int32),
+                            index=jnp.asarray([prompt_len], jnp.int32))
+
+
+def test_paged_insert_then_attend_matches_contiguous():
+    """Insert a batch-1 strip into non-contiguous pool pages; paged
+    attention over the page table must match dense attention over the
+    strip (same mask, online-softmax numerics)."""
+    one = _toy_contiguous()
+    pool = attn_lib.init_paged_cache(num_slots=3, num_pages=5, page_size=4,
+                                     max_pages=4, num_kv=2, head_dim=8,
+                                     dtype=jnp.float32)
+    pages = jnp.asarray([3, 1], jnp.int32)         # deliberately unordered
+    pool = attn_lib.paged_insert_prefill(pool, one, 1, pages)
+    assert pool.index[1] == 6 and pool.index[0] == 0
+    assert list(pool.page_table[1]) == [3, 1, -1, -1]
+
+    rng = np.random.default_rng(9)
+    q1 = jnp.asarray(rng.standard_normal((1, 1, 4, 8)), jnp.float32)
+    want = attn_lib.decode_attend(q1, one)
+    q_all = jnp.zeros((3, 1, 4, 8), jnp.float32).at[1].set(q1[0])
+    got = attn_lib.paged_decode_attend(q_all, pool)
+    np.testing.assert_allclose(got[1], want[0], atol=1e-5)
+    # slots with an empty page table attend to nothing -> exactly zero
+    assert not np.any(np.asarray(got[0])) and not np.any(np.asarray(got[2]))
+
+
+def test_paged_decode_write_matches_contiguous():
+    one = _toy_contiguous()
+    pool = attn_lib.init_paged_cache(3, 5, 4, 4, 2, 8, jnp.float32)
+    pool = attn_lib.paged_insert_prefill(pool, one,
+                                         jnp.asarray(1),
+                                         jnp.asarray([0, 2], jnp.int32))
+    rng = np.random.default_rng(3)
+    k1 = jnp.asarray(rng.standard_normal((1, 1, 2, 8)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((1, 1, 2, 8)), jnp.float32)
+    one2 = attn_lib.cache_update_decode(one, k1, v1, ring=False,
+                                        per_row=True)
+    k_all = jnp.zeros((3, 1, 2, 8), jnp.float32).at[1].set(k1[0])
+    pool2 = attn_lib.paged_cache_update_decode(pool, k_all,
+                                               k_all.at[1].set(v1[0]))
+    assert pool2.index[1] == 7
+    q1 = jnp.asarray(rng.standard_normal((1, 1, 4, 8)), jnp.float32)
+    want = attn_lib.decode_attend(q1, one2)
+    q_all = jnp.zeros((3, 1, 4, 8), jnp.float32).at[1].set(q1[0])
+    got = attn_lib.paged_decode_attend(q_all, pool2)
+    np.testing.assert_allclose(got[1], want[0], atol=1e-5)
+    # free slots (table -1) dropped their write: pool bytes untouched
+    assert pool2.index[0] == 1                     # index advances...
+    np.testing.assert_array_equal(pool2.page_table[0], -1)  # ...inert
+
+
+def test_recycled_page_stale_positions_masked():
+    """A freed page keeps its contents; the next decode write at page
+    offset 0 must rewrite the whole position row so none of the stale
+    positions survive into the attention mask."""
+    one = _toy_contiguous(cap=4, prompt_len=4)     # one full page
+    pool = attn_lib.init_paged_cache(2, 3, 4, 2, 2, 8, jnp.float32)
+    pool = attn_lib.paged_insert_prefill(pool, one,
+                                         jnp.asarray(0),
+                                         jnp.asarray([1], jnp.int32))
+    assert list(pool.positions[1]) == [0, 1, 2, 3]
+    pool = attn_lib.paged_reset_slot(pool, jnp.asarray(0))
+    np.testing.assert_array_equal(pool.page_table[0], -1)
+    assert list(pool.positions[1]) == [0, 1, 2, 3]  # stale, by design
+
+    # slot 1 (fresh request, index 0) is handed recycled page 1
+    pool = pool._replace(index=pool.index.at[1].set(0))
+    pool = attn_lib.paged_append_page(pool, jnp.asarray(1), jnp.asarray(0),
+                                      jnp.asarray(1))
+    k1 = jnp.ones((2, 1, 2, 8), jnp.float32)
+    pool = attn_lib.paged_cache_update_decode(pool, k1, k1)
+    assert list(pool.positions[1]) == [0, -1, -1, -1]
+
+
+# ---------------------------------------------------------------------------
+# engine: parity + invariants re-proved paged
+# ---------------------------------------------------------------------------
+
+def test_paged_greedy_parity_with_contiguous_ragged(served):
+    """Bit-identical greedy tokens, contiguous vs paged, on a ragged
+    workload that recycles slots and pages mid-decode."""
+    cfg, model, params = served
+    reqs = [Request(prompt=p, max_new_tokens=mn) for p, mn in RAGGED]
+    cont, _ = _run(model, params, reqs, page_size=0, num_slots=2)
+    paged, eng = _run(model, params, reqs, num_slots=2, num_pages=8)
+    assert cont == paged
+    assert eng.metrics.prefills == len(RAGGED)
+
+
+def test_paged_seeded_sampling_parity_with_contiguous(served):
+    """Sampled continuations are keyed per request, never per page:
+    explicit seeds give bit-identical tokens on both layouts."""
+    cfg, model, params = served
+    reqs = [Request(prompt=p, max_new_tokens=mn,
+                    sampling=SamplingParams(temperature=0.9, top_k=8,
+                                            seed=50 + i))
+            for i, (p, mn) in enumerate(RAGGED)]
+    cont, _ = _run(model, params, reqs, page_size=0, num_slots=2)
+    paged, _ = _run(model, params, reqs, num_slots=2, num_pages=8)
+    assert cont == paged
+
+
+def test_paged_free_slot_inertness(served):
+    """Free slots in a paged pool cannot touch the pool (their table
+    rows are -1 and writes drop): a lone request in a wide engine
+    matches its solo run exactly."""
+    cfg, model, params = served
+    solo, _ = _run(model, params, [Request(prompt=[3, 1, 4])], num_slots=1)
+    wide, _ = _run(model, params, [Request(prompt=[3, 1, 4])], num_slots=3)
+    assert solo == wide
+
+
+def test_paged_queue_order_independence(served):
+    """An explicitly seeded request's continuation is independent of
+    queue order — and therefore of which pages it lands in."""
+    cfg, model, params = served
+
+    def run_A(order):
+        eng = _engine(model, params, seed=7)
+        rid = None
+        for name in order:
+            if name == "A":
+                rid = eng.submit(Request(prompt=[3, 7],
+                                         sampling=SamplingParams(
+                                             temperature=1.3, top_k=8,
+                                             seed=99)))
+            else:
+                eng.submit(Request(prompt=[9, 1, 4]))
+        return {r.request_id: r.tokens for r in eng.run()}[rid]
+
+    assert run_A(["A", "B", "C"]) == run_A(["B", "C", "A"]) == run_A(["A"])
+
+
+def test_freed_pages_recycled_without_leakage(served):
+    """num_slots=1 with a pool exactly one request wide: every request
+    after the first decodes entirely in recycled pages and must still
+    match its solo reference."""
+    cfg, model, params = served
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    # each request worst-case needs ceil((4+4-1)/4) = 2 pages
+    got, eng = _run(model, params,
+                    [Request(prompt=p, max_new_tokens=4) for p in prompts],
+                    num_slots=1, num_pages=2, max_new_tokens=4)
+    for p, toks in zip(prompts, got):
+        solo, _ = _run(model, params, [Request(prompt=p, max_new_tokens=4)],
+                       num_slots=1, num_pages=2, max_new_tokens=4)
+        assert [toks] == solo
+    assert sorted(eng._free_pages) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# allocator: determinism, aliasing, backpressure
+# ---------------------------------------------------------------------------
+
+def _step_trace(model, params, **kw):
+    """Drive an engine tick by tick; record the page assignment of every
+    live slot after each tick and check the aliasing invariants."""
+    eng = _engine(model, params, **kw)
+    for p, mn in RAGGED:
+        eng.submit(Request(prompt=p, max_new_tokens=mn))
+    trace = []
+    while eng.queue_depth or any(s is not None for s in eng._slots):
+        eng.step()
+        live = {s.req_id: tuple(s.pages) for s in eng._slots
+                if s is not None}
+        trace.append(live)
+        # no page aliasing: every allocated page belongs to exactly one
+        # live request, and never to the free list
+        allocated = [p for pages in live.values() for p in pages]
+        assert len(allocated) == len(set(allocated)), live
+        assert not set(allocated) & set(eng._free_pages)
+        assert len(allocated) + len(eng._free_pages) == eng._num_pages
+    return trace, eng
+
+
+def test_page_allocator_deterministic_and_alias_free(served):
+    cfg, model, params = served
+    t1, e1 = _step_trace(model, params, num_slots=2, num_pages=8)
+    t2, e2 = _step_trace(model, params, num_slots=2, num_pages=8)
+    assert t1 == t2                      # alloc/free/reuse fully replayed
+    assert list(e1._free_pages) == list(e2._free_pages)
+    # pages were actually recycled across requests somewhere in the run
+    owners = {}
+    for live in t1:
+        for rid, pages in live.items():
+            for p in pages:
+                owners.setdefault(p, set()).add(rid)
+    assert any(len(v) > 1 for v in owners.values())
+
+
+def test_reservation_exhaustion_queues_instead_of_crashing(served):
+    cfg, model, params = served
+    # 3 pages: one 2-page reservation at a time + 1 spare; 4 slots idle
+    got, eng = _run(model, params,
+                    [Request(prompt=[1 + i, 2, 3], max_new_tokens=4)
+                     for i in range(4)],
+                    num_slots=4, num_pages=3, max_new_tokens=4)
+    assert len(got) == 4 and all(len(t) == 4 for t in got)
+    m = eng.metrics
+    assert m.reservation_failures > 0
+    assert m.pages_peak <= 3
+    assert m.pages_in_use == 0 and m.pages_reserved == 0
+    assert m.fragmentation == 0
+    assert m.peak_live_slots < 4         # page-bound, not slot-bound
+
+
+def test_submit_rejects_request_larger_than_pool(served):
+    cfg, model, params = served
+    eng = _engine(model, params, num_pages=4)        # 16-token pool
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(prompt=list(range(1, 15)), max_new_tokens=6))
+    # an impossible request must not poison the engine
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    assert len(eng.run()) == 1
+
+
+def test_lockstep_requires_contiguous_layout(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="lockstep"):
+        _engine(model, params, scheduler="lockstep")
+    # the ablation baseline still runs on the contiguous path
+    outs, _ = _run(model, params, [Request(prompt=[1, 2, 3])],
+                   page_size=0, scheduler="lockstep")
+    assert len(outs) == 1
+
+
+def test_paged_metrics_gauges_and_repr(served):
+    cfg, model, params = served
+    eng = _engine(model, params, num_slots=2, num_pages=8)
+    for p, mn in RAGGED[:3]:
+        eng.submit(Request(prompt=p, max_new_tokens=mn))
+    eng.run()
+    m = eng.metrics
+    assert m.num_pages == 8 and m.pages_peak > 0
+    assert m.pages_in_use == 0 and m.pages_reserved == 0
+    assert m.peak_live_slots == 2
+    r = repr(eng)
+    assert "pages=0/8" in r and "peak=" in r
+
+
+# ---------------------------------------------------------------------------
+# jaxpr: the decode step never materializes a per-slot max_len strip
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_never_materializes_max_len_strip(served):
+    """No intermediate of the paged decode step may carry both the slot
+    dim and the logical max_len dim — the (num_slots, max_len) strip is
+    exactly what the page pool exists to kill.  Dims are chosen to
+    collide with nothing else in the model (d_model=48, heads=4)."""
+    cfg, model, params = served
+    slots, max_len, page_size = 5, 40, 5
+    serve_step = make_serve_step_fn(model, top_k=8)
+    pool = model.init_paged_caches(slots, max_len, page_size, 10)
+    z = jnp.zeros((slots,), jnp.int32)
+    fn = functools.partial(serve_step, estimators=("unbiased",),
+                           max_len=max_len)
+    orig = ops.mach_topk
+    ops.mach_topk = functools.partial(orig, use_pallas=True, interpret=True)
+    try:
+        jaxpr = jax.make_jaxpr(fn)(
+            params, pool, None, {"tokens": jnp.zeros((slots, 1), jnp.int32)},
+            z, jax.random.key(0), z, z,
+            jnp.full((slots,), 0.9, jnp.float32),
+            jnp.full((slots,), 4, jnp.int32), z).jaxpr
+    finally:
+        ops.mach_topk = orig
+    bad = [tuple(a.shape) for a in intermediate_avals(jaxpr)
+           if hasattr(a, "shape") and slots in a.shape
+           and max_len in a.shape]
+    assert not bad, bad
