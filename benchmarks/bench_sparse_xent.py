@@ -48,17 +48,25 @@ import numpy as np
 
 from benchmarks.common import intermediate_avals, make_csr_case, timeit
 from repro.kernels import ops, ref
+from repro.kernels.mach_fused_xent import GATHER_NNZ_THRESHOLD
 
 # (N, d, R, B, nnz_max): the first three share (N, R, B, nnz) and sweep
-# d only — the d-independence claim; the last is an ODP-like head
-# (R=25, B=32) at a d no dense (N, d) scatter should be paid for.
+# d only — the d-independence claim; the fourth is an ODP-like head
+# (R=25, B=32) at a d no dense (N, d) scatter should be paid for; the
+# last crosses GATHER_NNZ_THRESHOLD so the dispatcher routes it to the
+# scalar-prefetch gather kernel (no (bn, jp, bd) one-hot densification
+# — the regime the padded-ELL path could not block).  N is small there
+# because the interpret-mode grid pays per example row.
 SWEEP = [
     (64, 512, 8, 64, 16),
     (64, 2048, 8, 64, 16),
     (64, 8192, 8, 64, 16),
     (128, 4096, 25, 32, 32),
+    (4, 1024, 8, 128, 512),     # high-nnz: gather path (nnz < R·B and
+    #                             nnz < d, so the ELL operands stay
+    #                             under the N·R·B / N·d thresholds)
 ]
-SMOKE_SWEEP = SWEEP[:2]
+SMOKE_SWEEP = SWEEP[:2] + SWEEP[-1:]
 D_SWEEP_KEY = (64, 8, 64, 16)      # (N, R, B, nnz) of the d-progression
 
 
@@ -122,8 +130,9 @@ def bench(smoke: bool = False, report=None) -> dict:
             np.allclose(np.asarray(a), np.asarray(k), rtol=1e-4, atol=1e-6)
             for a, k in zip(dr, dk))
 
+        impl = "gather" if nnz_max >= GATHER_NNZ_THRESHOLD else "densify"
         row = {"N": n, "d": d, "R": r, "B": b, "RB": r * b,
-               "nnz_max": nnz_max,
+               "nnz_max": nnz_max, "sparse_impl": impl,
                "us_densified": us_dense, "us_fused": us_fused,
                "fused_is_kernel": on_tpu,
                "peak_act_bytes_densified": mem_dense["peak_act_bytes"],
@@ -143,7 +152,7 @@ def bench(smoke: bool = False, report=None) -> dict:
                    f"densified={us_dense:.0f}us "
                    f"act_ratio={row['act_ratio']:.1f}x "
                    f"loss_err={loss_err:.1e} grads_ok={grads_ok} "
-                   f"kernel={on_tpu}")
+                   f"impl={impl} kernel={on_tpu}")
 
     verified = all(r["grad_allclose"] and r["parity_rel_err"] <= 1e-5
                    for r in rows)

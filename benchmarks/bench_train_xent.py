@@ -37,6 +37,16 @@ accounting at every d but parity only at d=1k (interpret-mode grids at
 d=12k are minutes-slow on CPU); the full run checks parity at all
 three.
 
+The **500k-label gate** (ISSUE 8): the commodity-GPU workload of
+arXiv 2306.03725 — K = 500k Zipf classes over sparse bag-of-words
+features (``SparseExtremeDataset``) — trained through the fused CSR
+loss with and without dynamic bucket selection at ≥ 5× C-axis
+reduction.  Quick mode gates the *per-step* wall-clock ratio
+(selected/full < 1) and parity within the documented one-sided bias
+bound (``ref.mach_selected_bias_bound_ref``); the full run also races
+both paths to the full loss's bucket-accuracy target and gates
+**wall-clock-to-target** (selected strictly faster).
+
 Writes ``BENCH_xent.json`` (see ``--out``) so the train-loss perf and
 memory trajectory is tracked from this PR forward.
 
@@ -81,6 +91,18 @@ QUICK_SWEEP = SWEEP[:2]
 # N-independent, and interpret mode pays per grid step.
 D_SWEEP = [1024, 4096, 12288]
 D_SWEEP_RB = (32, 512)
+
+# 500k-label workload (ISSUE 8): K Zipf classes hashed to R heads of B
+# buckets (C = R·B fused columns); c_sel = B/8 → 8× C-axis cut (the
+# gate requires ≥ 5×).  d/nnz are the sparse bag-of-words regime the
+# gather kernel exists for.  N matters: the selected path pays a
+# per-step O(d·R·c_sel) W-column gather/scatter that the batch must
+# amortize — N = 512 is the realistic large-batch regime (and the
+# smallest power of two where the 8× matmul saving clearly dominates
+# the column traffic on CPU).
+EXTREME_500K = {"num_labels": 500_000, "num_buckets": 4096, "R": 8,
+                "d": 1024, "nnz": 64, "N": 512, "c_sel": 512,
+                "refresh_every": 10}
 
 
 def _memory_model(fn, args, n: int, nrb: int) -> dict:
@@ -150,6 +172,158 @@ def _d_sweep_gate(quick: bool, report=None) -> dict:
     return {"rows": rows, "ok": bool(ok)}
 
 
+def _bench_500k(quick: bool, report=None) -> dict:
+    """ISSUE 8's acceptance gate: dynamic bucket selection on the
+    500k-label sparse workload.
+
+    Quick (CI): per-step value_and_grad wall-clock, selected (cached
+    proxy — the trainer's steady state) vs full, must come in < 1× at
+    the ≥ 5× C-axis reduction, and the per-example gap ``full − sel``
+    must be one-sided and within ``mach_selected_bias_bound_ref``.
+    Full run adds the wall-clock-to-target-accuracy race: both paths
+    train (adamw) from the same init until the full path's final
+    bucket accuracy; selected must get there in strictly less
+    accumulated train-step time."""
+    import time as _time
+
+    from repro.core.mach import MACHConfig, MACHLinear
+    from repro.data.extreme import (SparseExtremeDataConfig,
+                                    SparseExtremeDataset)
+
+    p = EXTREME_500K
+    k, b, r = p["num_labels"], p["num_buckets"], p["R"]
+    d, nnz, n, c_sel = p["d"], p["nnz"], p["N"], p["c_sel"]
+    reduction = b // c_sel
+    mcfg = MACHConfig(k, b, r)
+    ds = SparseExtremeDataset(SparseExtremeDataConfig(
+        num_classes=k, num_features=d, nnz=nnz, sig_features=16))
+    head = MACHLinear(mcfg, d, fused=True)
+    params = head.init(jax.random.key(0))
+    sb, y = ds.batch_at(0, n)
+
+    # cached proxy scores — what Trainer injects between refreshes
+    proxy = jax.block_until_ready(head.bucket_proxy_scores(params, sb))
+
+    def full_vag(params_):
+        return jax.value_and_grad(
+            lambda pp: head.fused_loss(pp, sb, y))(params_)
+
+    def sel_vag(params_):
+        return jax.value_and_grad(lambda pp: head.fused_loss(
+            pp, sb, y, bucket_select=(c_sel, p["refresh_every"]),
+            bucket_proxy=proxy))(params_)
+
+    us_full = timeit(jax.jit(full_vag), params, iters=3)
+    us_sel = timeit(jax.jit(sel_vag), params, iters=3)
+    step_ratio = us_sel / us_full
+
+    # parity within the documented one-sided bias bound (per example)
+    hashed = jnp.moveaxis(mcfg.hash_labels(y), 0, -1).astype(jnp.int32)
+    w2 = params["w"].reshape(d, -1)
+    bias = params["b"].reshape(-1)
+    selected = ops.mach_select_buckets(proxy, hashed, num_buckets=b,
+                                       c_sel=c_sel)
+    full_nll = ops.mach_fused_xent_csr(
+        sb.indptr, sb.indices, sb.values, w2, hashed, num_buckets=b,
+        nnz_max=sb.nnz_max, bias=bias)
+    sel_nll = ops.mach_fused_xent_csr_selected(
+        sb.indptr, sb.indices, sb.values, w2, hashed, selected,
+        num_buckets=b, nnz_max=sb.nnz_max, bias=bias)
+    bound = ref.mach_selected_bias_bound_ref(
+        sb.to_dense(), w2, hashed, selected, b, bias=bias)
+    gap = np.asarray(full_nll - sel_nll)
+    tol = 1e-3 * float(np.max(np.asarray(full_nll)))     # f32 at ~R·log B
+    one_sided = bool(np.all(gap >= -tol))
+    within_bound = bool(np.all(gap <= np.asarray(bound) + tol))
+
+    out = {"num_labels": k, "num_buckets": b, "R": r, "C": r * b,
+           "d": d, "nnz": nnz, "N": n, "c_sel": c_sel,
+           "c_axis_reduction": reduction,
+           "us_full_step": us_full, "us_selected_step": us_sel,
+           "step_ratio": step_ratio,
+           "gap_one_sided": one_sided, "gap_within_bound": within_bound,
+           "max_gap": float(np.max(gap)),
+           "max_bound": float(np.max(np.asarray(bound)))}
+    ok = step_ratio < 1.0 and reduction >= 5 and one_sided and within_bound
+    if report:
+        report("train_xent/extreme500k_step", us_sel,
+               f"full={us_full:.0f}us ratio={step_ratio:.2f} "
+               f"reduction={reduction}x one_sided={one_sided} "
+               f"within_bound={within_bound}")
+
+    if not quick:
+        # wall-clock-to-target race, same init, fresh batch per step
+        from repro.optim import (apply_updates, make_optimizer,
+                                 make_schedule)
+        opt = make_optimizer("adamw", make_schedule("constant", value=3e-2),
+                             weight_decay=0.0)
+        test_sb, test_y = ds.batch_at(10_000, 128, "test")
+        test_x = test_sb.to_dense()
+        test_hash = jnp.moveaxis(mcfg.hash_labels(test_y), 0, -1)
+
+        @jax.jit
+        def bucket_acc(params_):
+            logits = jnp.einsum("nd,drb->nrb", test_x, params_["w"]) \
+                + params_["b"]
+            return jnp.mean((jnp.argmax(logits, -1) == test_hash)
+                            .astype(jnp.float32))
+
+        def race(select: bool, steps: int = 30, eval_every: int = 5):
+            prms = head.init(jax.random.key(0))
+            ost = opt.init(prms)
+            prx = None
+
+            @jax.jit
+            def step(prms_, ost_, sb_, y_, prx_):
+                def lf(pp):
+                    if select:
+                        return head.fused_loss(
+                            pp, sb_, y_,
+                            bucket_select=(c_sel, p["refresh_every"]),
+                            bucket_proxy=prx_)
+                    return head.fused_loss(pp, sb_, y_)
+                loss, g = jax.value_and_grad(lf)(prms_)
+                upd, ost_ = opt.update(g, ost_, prms_)
+                return apply_updates(prms_, upd), ost_, loss
+
+            trace, spent = [], 0.0
+            for s in range(steps):
+                sb_, y_ = ds.batch_at(1 + s, n)
+                if select and s % p["refresh_every"] == 0:
+                    prx = jax.block_until_ready(
+                        head.bucket_proxy_scores(prms, sb_))
+                t0 = _time.perf_counter()
+                prms, ost, _ = step(prms, ost, sb_, y_, prx)
+                jax.block_until_ready(prms)
+                if s:                       # skip the compile step
+                    spent += _time.perf_counter() - t0
+                if (s + 1) % eval_every == 0:
+                    trace.append((spent, float(bucket_acc(prms))))
+            return trace
+
+        full_trace = race(False)
+        sel_trace = race(True)
+        target = full_trace[-1][1]
+        t_full = next(t for t, a in full_trace if a >= target)
+        t_sel = next((t for t, a in sel_trace if a >= target), None)
+        race_ok = t_sel is not None and t_sel < t_full
+        out["wallclock"] = {
+            "target_bucket_acc": target,
+            "s_full_to_target": t_full,
+            "s_selected_to_target": t_sel,
+            "selected_final_acc": sel_trace[-1][1],
+            "ok": bool(race_ok)}
+        ok = ok and race_ok
+        if report:
+            report("train_xent/extreme500k_wallclock", 0.0,
+                   f"target_acc={target:.3f} full={t_full:.1f}s "
+                   f"selected={t_sel if t_sel is None else round(t_sel, 1)}s "
+                   f"ok={race_ok}")
+
+    out["ok"] = bool(ok)
+    return out
+
+
 def bench(quick: bool = False, report=None) -> dict:
     backend = jax.default_backend()
     on_tpu = backend == "tpu"
@@ -203,6 +377,7 @@ def bench(quick: bool = False, report=None) -> dict:
                    f"kernel={on_tpu}")
 
     d_sweep = _d_sweep_gate(quick, report)
+    extreme = _bench_500k(quick, report)
     verified = all(r["grad_allclose"] and r["parity_max_abs_err"] <= 1e-5
                    for r in rows)
     no_nrb = all(not r["has_nrb_tensor_fused"] for r in rows)
@@ -211,11 +386,14 @@ def bench(quick: bool = False, report=None) -> dict:
            "fused_free_of_nrb_tensor": bool(no_nrb),
            "d_sweep_ok": d_sweep["ok"],
            "d_sweep": d_sweep["rows"],
+           "extreme_500k_ok": extreme["ok"],
+           "extreme_500k": extreme,
            "configs": rows}
     if report:
         report("train_xent/verified", 0.0,
                f"interpret_match={verified} no_nrb_tensor={no_nrb} "
-               f"d_sweep_ok={d_sweep['ok']}")
+               f"d_sweep_ok={d_sweep['ok']} "
+               f"extreme_500k_ok={extreme['ok']}")
     return out
 
 
@@ -240,10 +418,12 @@ def main() -> int:
           f"backend={result['backend']}, "
           f"verified={result['verified_interpret']}, "
           f"no_nrb_tensor={result['fused_free_of_nrb_tensor']}, "
-          f"d_sweep_ok={result['d_sweep_ok']})")
+          f"d_sweep_ok={result['d_sweep_ok']}, "
+          f"extreme_500k_ok={result['extreme_500k_ok']})")
     return 0 if (result["verified_interpret"]
                  and result["fused_free_of_nrb_tensor"]
-                 and result["d_sweep_ok"]) else 1
+                 and result["d_sweep_ok"]
+                 and result["extreme_500k_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -9,7 +9,10 @@ Prints ``name,us_per_call,derived`` CSV lines (shared report hook).
   bench_decode_topk streaming top-k decode vs (B, V) reference
                     (also writes BENCH_decode.json)
   bench_train_xent  fused projection+CE training loss vs materialized
-                    logits (also writes BENCH_xent.json)
+                    logits, plus the 500k-label dynamic bucket-selection
+                    gate: selected step must beat the full step at ≥5×
+                    C-axis reduction with the NLL gap inside the
+                    one-sided bias bound (also writes BENCH_xent.json)
   bench_sparse_xent fused CSR projection+CE vs densified reference —
                     the ODP sparse-feature path (also writes
                     BENCH_sparse.json)
@@ -91,7 +94,16 @@ def _check_regression(name: str, mod, fail_ratio: float = 1.25) -> bool:
         return True
     med, ratios, ok = bench_regression(old, new, fail_ratio)
     if med is None:
-        _report(f"{name}/regression", 0.0, "no committed baseline")
+        # warning, not a crash: the suite ran, but its perf trajectory
+        # is NOT gated until a baseline is committed
+        print(f"WARNING: {bench_file} has no committed baseline "
+              f"(`git show HEAD:{bench_file}` failed) — regression gate "
+              f"skipped for {name}; commit the freshly written "
+              f"{bench_file} to put this suite under the gate.",
+              file=sys.stderr, flush=True)
+        _report(f"{name}/regression", 0.0,
+                f"WARNING: no committed baseline for {bench_file} — "
+                "gate skipped")
         return True
     worst_key = max(ratios, key=ratios.get)
     _report(f"{name}/regression", 0.0,

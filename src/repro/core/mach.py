@@ -189,9 +189,25 @@ class MACHHead(abc.ABC):
     @abc.abstractmethod
     def fused_loss(self, params: dict, inputs: Any, labels: jnp.ndarray,
                    weights: Optional[jnp.ndarray] = None,
+                   bucket_select: Optional[tuple] = None,
+                   bucket_proxy: Optional[jnp.ndarray] = None,
                    use_pallas: Optional[bool] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
-        """Logit-free counterpart of ``loss`` (fused projection+CE)."""
+        """Logit-free counterpart of ``loss`` (fused projection+CE).
+
+        ``bucket_select=(c_sel, refresh_every)`` enables dynamic bucket
+        selection: the fused loss runs over the top-``c_sel``
+        proxy-scored bucket columns per repetition (label buckets
+        force-included — one-sided, bounded bias; see
+        ``ops.mach_fused_xent``).  ``bucket_proxy`` passes cached (R, B)
+        proxy scores (``train.Trainer`` refreshes them every
+        ``refresh_every`` steps via ``bucket_proxy_scores``)."""
+
+    def bucket_proxy_scores(self, params: dict, inputs: Any) -> jnp.ndarray:
+        """(R, B) proxy scores for dynamic bucket selection — the
+        logits of the batch-mean activation.  Cacheable across steps;
+        cheap (one d·R·B matvec)."""
+        raise NotImplementedError
 
     @abc.abstractmethod
     def param_count(self) -> int:
@@ -291,6 +307,8 @@ class MACHLinear(MACHHead):
 
     def fused_loss(self, params: dict, x: Any, y: jnp.ndarray,
                    weights: Optional[jnp.ndarray] = None,
+                   bucket_select: Optional[tuple] = None,
+                   bucket_proxy: Optional[jnp.ndarray] = None,
                    use_pallas: Optional[bool] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
         """Logit-free loss via ``ops.mach_fused_xent`` (dense x) or
@@ -298,7 +316,8 @@ class MACHLinear(MACHHead):
         native kernel operand on both branches — no per-step
         (d+1, R·B) W-concat on the dense path and no ELL widening on
         the CSR path; dbias comes from the kernels' (1, bc) scratch
-        reduction."""
+        reduction.  ``bucket_select``/``bucket_proxy`` as on
+        ``MACHHead.fused_loss``."""
         from repro.kernels import ops  # deferred: kernels import core
         c = self.cfg
         hashed = jnp.moveaxis(c.hash_labels(y), 0, -1)       # (n, R)
@@ -308,12 +327,27 @@ class MACHLinear(MACHHead):
             nll = ops.mach_fused_xent_csr(
                 x.indptr, x.indices, x.values, w2, hashed,
                 num_buckets=c.num_buckets, nnz_max=x.nnz_max, bias=bias,
+                bucket_select=bucket_select, bucket_proxy=bucket_proxy,
                 use_pallas=use_pallas, interpret=interpret)
         else:
             nll = ops.mach_fused_xent(
                 x, w2, hashed, num_buckets=c.num_buckets, bias=bias,
+                bucket_select=bucket_select, bucket_proxy=bucket_proxy,
                 use_pallas=use_pallas, interpret=interpret)
         return _weighted_mean(nll, weights)
+
+    def bucket_proxy_scores(self, params: dict, x: Any) -> jnp.ndarray:
+        """(R, B) dynamic-bucket-selection proxy from a dense or CSR
+        batch (the CSR mean is a scatter-add — never densified)."""
+        from repro.kernels import ops  # deferred: kernels import core
+        w2 = params["w"].reshape(self.dim, -1)
+        bias = params["b"].reshape(-1)
+        if is_sparse_batch(x):
+            return ops.mach_bucket_proxy(
+                w=w2, num_buckets=self.cfg.num_buckets, bias=bias,
+                csr=(x.indptr, x.indices, x.values))
+        return ops.mach_bucket_proxy(
+            x, w2, num_buckets=self.cfg.num_buckets, bias=bias)
 
     def param_count(self) -> int:
         c = self.cfg
@@ -374,19 +408,30 @@ class MACHOutputHead(MACHHead):
 
     def fused_loss(self, params: dict, h: jnp.ndarray, labels: jnp.ndarray,
                    weights: Optional[jnp.ndarray] = None,
+                   bucket_select: Optional[tuple] = None,
+                   bucket_proxy: Optional[jnp.ndarray] = None,
                    use_pallas: Optional[bool] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
         """Logit-free counterpart of ``loss``: the projection is fused
         into the hashed cross-entropy (``ops.mach_fused_xent``), so the
         (…, R, B) logits tensor never exists — train-time activation
         memory is O(N·d), not O(N·R·B).  Same value and gradients as
-        ``loss`` (the VJP accumulates dW and dh in-kernel)."""
+        ``loss`` (the VJP accumulates dW and dh in-kernel).
+        ``bucket_select``/``bucket_proxy`` as on ``MACHHead.fused_loss``."""
         from repro.kernels import ops  # deferred: kernels import core
         hashed = jnp.moveaxis(self.cfg.hash_labels(labels), 0, -1)
         nll = ops.mach_fused_xent(h, params["kernel"], hashed,
                                   num_buckets=self.cfg.num_buckets,
+                                  bucket_select=bucket_select,
+                                  bucket_proxy=bucket_proxy,
                                   use_pallas=use_pallas, interpret=interpret)
         return _weighted_mean(nll, weights)
+
+    def bucket_proxy_scores(self, params: dict, h: jnp.ndarray) -> jnp.ndarray:
+        """(R, B) dynamic-bucket-selection proxy from hidden states."""
+        from repro.kernels import ops  # deferred: kernels import core
+        return ops.mach_bucket_proxy(
+            h, params["kernel"], num_buckets=self.cfg.num_buckets)
 
     def param_count(self) -> int:
         return self.dim * self.out_features

@@ -56,6 +56,27 @@ the dense (N, d) activation never exists in HBM.  ``vals`` is treated
 as non-differentiable data (zero cotangent): features are inputs, not
 parameters.
 
+Scalar-prefetch gather (the high-nnz sparse path): the one-hot
+densification pays O(bn·jp·bd) VMEM and compute per step, which makes
+bag-of-words nnz >= 1k non-viable — ``choose_sparse_blocks`` runs out
+of budget.  The ``*_gather`` family instead prefetches the ELL
+cols/vals into SMEM (``PrefetchScalarGridSpec``, the pattern from
+``mach_candidates.py``) and lets the W BlockSpec index map DMA the
+cols[i, j]-th W row directly: forward grid (N, C/bc, jp), one example
+row per grid step, the logits tile accumulating rank-1 updates
+``v_ij · W[cols_ij, blk]`` in (1, bc) scratch.  Per-step VMEM is O(bc)
+— independent of nnz AND of d, so any nnz fits the same budget.  The
+backward, grid (N, C/bc, 2·jp), rebuilds the tile in phase 1 (forming
+dlogits at its last step, reducing dbias into a zero-aliased revisited
+(1, bc) row) and in phase 2 scatter-adds ``dW[cols_ij] += v_ij ·
+dlogits`` through gather-indexed output blocks; both grad outputs are
+``input_output_aliases``-pinned to zero-filled operands so unvisited W
+rows stay zero and every visit is a pure accumulate (duplicate col ids
+sum, matching the CSR scatter-add).  The densifying family remains the
+low-nnz fast path and, via ``ref.mach_fused_xent_csr_ref``, the parity
+oracle; ``ops.mach_fused_xent_csr`` picks between them (``sparse_impl``
+knob, auto at ``GATHER_NNZ_THRESHOLD``).
+
 Block choosing: ``choose_fused_blocks`` / ``choose_sparse_blocks``
 enumerate candidate tilings in preference order (dense: keep bn large
 first — it divides the dominant W stream — then bc, then bd; sparse:
@@ -234,6 +255,57 @@ def choose_sparse_blocks(n: int, d: int, r: int, b: int, j: int,
         f"(n={n}, d={d}, r={r}, b={b}, nnz_max={j} -> jp={jp})")
 
 
+# nnz at/above which ops.mach_fused_xent_csr auto-routes to the gather
+# family: the densify tile's 2·bn·jp·bd term crosses the default budget
+# around here, and the gather path's per-step cost (one (1, bc) FMA per
+# slot) beats the one-hot contraction well before that.
+GATHER_NNZ_THRESHOLD = 512
+
+
+def gather_tile_bytes(bc: int, rp: int) -> int:
+    """Accounted VMEM bytes of the gather kernels' resident tiles (f32),
+    the max over the forward and backward pass.  One example row per
+    grid step; W streams as a double-buffered (1, bc) row gather — no
+    (bn, jp, bd) one-hot tile and no (bd, bc) W tile, so the per-step
+    VMEM driver collapses from O(bn·jp·bd) to O(bc), independent of
+    both nnz and d:
+
+    fwd:  W row 2·(1,bc) + bias (1,bc) + acc (1,bc) + y (1,rp) + loss
+          (1,1) + lse (1,rp) + 3 stats (1,rp)
+    bwd:  W row + dW row 2·2·(1,bc) + dbias (1,bc) + bias (1,bc) +
+          acc/dlog scratch 2·(1,bc) + y/lse 2·(1,rp) + g (1,1)
+
+    The ELL cols/vals are scalar-prefetch operands and live in SMEM
+    (2·4·N·jp bytes), not VMEM — callers account them separately."""
+    fwd = 2 * bc + bc + bc + 5 * rp + 1
+    bwd = 4 * bc + bc + bc + 2 * bc + 2 * rp + 1
+    return 4 * max(fwd, bwd)
+
+
+def choose_gather_blocks(n: int, d: int, r: int, b: int, j: int,
+                         block_c: Optional[int] = None,
+                         vmem_budget: int = DEFAULT_VMEM_BUDGET
+                         ) -> tuple[int, int, int, int]:
+    """Pick (bc, rp, bp, jp) for the gather kernels — the first
+    head-aligned column-block candidate whose ``gather_tile_bytes`` fit
+    ``vmem_budget``.  nnz never enters the accounting (the ELL operands
+    are SMEM scalars; W streams one row at a time), so bag-of-words
+    nnz >= 1k fits the same budget as nnz = 8; ``jp`` is only the
+    padded grid extent of the nnz axis."""
+    jp = max(j, 1)
+    bc_caps = ([max(1, block_c)] if block_c is not None
+               else [2048, 1024, 512, 256, 128])
+    for bc_cap in bc_caps:
+        bc, rp, bp = _align_columns(bc_cap, r, b)
+        if gather_tile_bytes(bc, rp) <= vmem_budget:
+            return bc, rp, bp, jp
+    bc, rp, bp = _align_columns(bc_caps[-1], r, b)
+    raise ValueError(
+        f"no gather fused-xent tiling fits vmem_budget={vmem_budget}: "
+        f"minimum candidate bc={bc} needs {gather_tile_bytes(bc, rp)} "
+        f"bytes (n={n}, d={d}, r={r}, b={b}, nnz_max={j})")
+
+
 def _pad_bias(bias, r, b, rp, bp):
     """bias (R·B,) or None -> (1, rp·bp) f32 (zeros when absent — the
     kernels take the operand unconditionally; the add is free)."""
@@ -281,6 +353,26 @@ def _pad_sparse_operands(cols, vals, w, bias, labels, r, b, bn, rp, bp,
     w3 = jnp.pad(w3, ((0, dp - d), (0, rp - r), (0, bp - b)))
     return cols, vals, w3.reshape(dp, rp * bp), \
         _pad_bias(bias, r, b, rp, bp), labels, dp
+
+
+def _pad_gather_operands(cols, vals, w, bias, labels, r, b, rp, bp, jp):
+    """ELL (cols/vals (N, J)), w (d, R·B), bias, y (N, R) -> scalar-
+    prefetch operands (cols (N, jp) int32 clamped to [0, d-1], vals
+    (N, jp) f32) + padded (w (d, rp·bp), bias (1, rp·bp), y (N, rp)).
+    No d or N padding: the gather reads whole W rows one at a time and
+    the grid runs one step per example row.  Out-of-range col ids (the
+    CSR sentinel ``d``) clamp to d-1 — their val is 0, so the gathered
+    row contributes nothing; clamping keeps every prefetched index a
+    valid W block id."""
+    n, j = cols.shape
+    d = w.shape[0]
+    cols = jnp.clip(cols.astype(jnp.int32), 0, d - 1)
+    cols = jnp.pad(cols, ((0, 0), (0, jp - j)))
+    vals = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, jp - j)))
+    labels = jnp.pad(labels.astype(jnp.int32), ((0, 0), (0, rp - r)))
+    w3 = jnp.pad(w.reshape(d, r, b), ((0, 0), (0, rp - r), (0, bp - b)))
+    return cols, vals, w3.reshape(d, rp * bp), \
+        _pad_bias(bias, r, b, rp, bp), labels
 
 
 def _tile_geometry(bc, bp, kblk):
@@ -535,6 +627,93 @@ def _sparse_bwd_body(bn, bc, bd, nkd, r, rp, b, bp, jp,
     _dblocked_bwd_step(a, nkd, bn, bc, r, rp, b, bp, w_ref, bias_ref,
                        y_ref, lse_ref, g_ref, dw_ref, db_ref, acc_scr,
                        dlog_scr)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch gather kernel bodies (high-nnz sparse path: no
+# densification — W rows are DMA'd by ELL column id via the
+# scalar-prefetched index maps in _gather_call).
+# ---------------------------------------------------------------------------
+
+def _gather_fwd_body(r, rp, b, bp, bc,
+                     cols_sref, vals_sref, w_ref, bias_ref, y_ref,
+                     loss_ref, lse_ref, acc_scr, m_scr, s_scr, p_scr):
+    """Grid (N, C/bc, jp), nnz minor; one example row per step.  w_ref
+    is the (1, bc) slice of the cols[i, jj]-th W row (gathered by the
+    BlockSpec index map); the logits tile accumulates rank-1 updates
+    ``v·w_row`` across the jp axis in (1, bc) scratch — padded slots
+    carry val 0 so their (clamped) col id is irrelevant."""
+    i = pl.program_id(0)
+    jblk = pl.program_id(1)
+    jj = pl.program_id(2)
+    njb = pl.num_programs(1)
+    nj = pl.num_programs(2)
+
+    @pl.when((jblk == 0) & (jj == 0))
+    def _init_stats():
+        m_scr[...] = jnp.full((1, rp), NEG_INF, jnp.float32)
+        s_scr[...] = jnp.zeros((1, rp), jnp.float32)
+        p_scr[...] = jnp.zeros((1, rp), jnp.float32)
+
+    @pl.when(jj == 0)
+    def _init_acc():
+        acc_scr[...] = jnp.zeros((1, bc), jnp.float32)
+
+    acc_scr[...] += vals_sref[i, jj] * w_ref[...].astype(jnp.float32)
+
+    @pl.when(jj == nj - 1)
+    def _reduce():
+        nh, width, h0, boff = _tile_geometry(bc, bp, jblk)
+        tile3, bidx = _finalize_tile(acc_scr[...], bias_ref, 1, nh,
+                                     width, boff, b)
+        _online_update(tile3, bidx, y_ref, m_scr, s_scr, p_scr, h0, nh)
+
+        @pl.when(jblk == njb - 1)
+        def _flush():
+            _flush_stats(r, loss_ref, lse_ref, m_scr, s_scr, p_scr)
+
+
+def _gather_bwd_body(r, rp, b, bp, bc,
+                     cols_sref, vals_sref, w_ref, bias_ref, y_ref,
+                     lse_ref, g_ref, dwz_ref, dbz_ref, dw_ref, db_ref,
+                     acc_scr, dlog_scr):
+    """Grid (N, C/bc, 2·jp).  Phase 1 (k2 < jp) rebuilds the logits
+    tile from the gathered rows once; at its last step it forms dlogits
+    into (1, bc) scratch and accumulates dbias into the revisited
+    (1, bc) output row.  Phase 2 scatter-adds ``dW_row += v·dlogits``
+    through the gather-indexed (1, bc) output block — the same
+    cols[i, ·]-th row the forward read.  Both grad outputs are
+    ``input_output_aliases``-pinned to zero-filled operands
+    (``dwz_ref``/``dbz_ref``, never read in-kernel), so unvisited W
+    rows stay zero and every visit — duplicate col ids included — is a
+    pure accumulate; phase-1 steps map the same dW blocks but leave
+    them untouched."""
+    del dwz_ref, dbz_ref
+    i = pl.program_id(0)
+    jblk = pl.program_id(1)
+    k2 = pl.program_id(2)
+    nj = pl.num_programs(2) // 2
+
+    @pl.when(k2 < nj)
+    def _logits_phase():
+        @pl.when(k2 == 0)
+        def _init():
+            acc_scr[...] = jnp.zeros((1, bc), jnp.float32)
+
+        acc_scr[...] += vals_sref[i, k2] * w_ref[...].astype(jnp.float32)
+
+        @pl.when(k2 == nj - 1)
+        def _dlog():
+            nh, width, h0, boff = _tile_geometry(bc, bp, jblk)
+            tile3, bidx = _finalize_tile(acc_scr[...], bias_ref, 1, nh,
+                                         width, boff, b)
+            dlog_scr[...] = _dlogits_from_tile(
+                tile3, bidx, y_ref, lse_ref, g_ref, r, b, h0, nh, width)
+            db_ref[...] += dlog_scr[...]
+
+    @pl.when(k2 >= nj)
+    def _grad_phase():
+        dw_ref[...] += vals_sref[i, k2 - nj] * dlog_scr[...]
 
 
 # ---------------------------------------------------------------------------
@@ -794,3 +973,133 @@ def _sparse_bwd(num_buckets, block_n, block_c, block_d, interpret, res, g):
 
 
 mach_fused_xent_sparse_pallas.defvjp(_sparse_fwd, _sparse_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch gather entry point (high-nnz sparse path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def mach_fused_xent_gather_pallas(cols: jnp.ndarray, vals: jnp.ndarray,
+                                  w: jnp.ndarray,
+                                  bias: Optional[jnp.ndarray],
+                                  hashed_labels: jnp.ndarray,
+                                  num_buckets: int,
+                                  block_c: Optional[int] = None,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """Per-example summed R-head CE from a padded-ELL sparse batch —
+    the scalar-prefetch gather family (no densification, no one-hot).
+
+    Same contract as ``mach_fused_xent_sparse_pallas`` (cols/vals
+    (N, J); w (d, R·B); optional bias (R·B,); hashed_labels (N, R) ->
+    (N,) f32; differentiable wrt w and bias, ``vals`` gets a zero
+    cotangent) but the active W rows are DMA'd by ELL column id via
+    ``PrefetchScalarGridSpec`` instead of densified in VMEM: per-step
+    VMEM is O(bc) — independent of nnz and of d — so high-nnz (>= 1k)
+    bag-of-words shapes are first-class.  The ELL cols/vals ride in
+    SMEM (2·4·N·J bytes); only ``block_c`` tiles (there is no bn or bd
+    here — one example row per grid step, whole W rows per gather).
+    Interpret-mode caveat as the module docstring: the zero-aliased
+    gather-indexed dW accumulation needs sequential grid order; native
+    Mosaic lowering is unvalidated (ROADMAP item 3)."""
+    out, _ = _gather_fwd(cols, vals, w, bias, hashed_labels, num_buckets,
+                         block_c, interpret)
+    return out
+
+
+def _gather_call(kind, colsp, valsp, wp, biasp, yp, lsep, gp, dims, bc,
+                 jp, interpret):
+    """Shared pallas_call builder for the gather forward/backward.  The
+    scalar-prefetched ``cols`` feed every W/dW BlockSpec index map —
+    the DMA gather itself."""
+    n, d, r, rp, b, bp, c = dims
+    if kind == "fwd":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n, c // bc, jp),
+            in_specs=[
+                pl.BlockSpec((1, bc),
+                             lambda i, j, k, cols, vals: (cols[i, k], j)),
+                pl.BlockSpec((1, bc), lambda i, j, k, cols, vals: (0, j)),
+                pl.BlockSpec((1, rp), lambda i, j, k, cols, vals: (i, 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((1, 1), lambda i, j, k, cols, vals: (i, 0)),
+                pl.BlockSpec((1, rp), lambda i, j, k, cols, vals: (i, 0)),
+            ),
+            scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)]
+            + [pltpu.VMEM((1, rp), jnp.float32)] * 3,
+        )
+        return pl.pallas_call(
+            functools.partial(_gather_fwd_body, r, rp, b, bp, bc),
+            grid_spec=grid_spec,
+            out_shape=(jax.ShapeDtypeStruct((n, 1), jnp.float32),
+                       jax.ShapeDtypeStruct((n, rp), jnp.float32)),
+            compiler_params=_SEQUENTIAL3,
+            interpret=interpret,
+        )(colsp, valsp, wp, biasp, yp)
+    # bwd: both phases of an (i, j) cell map the same gathered dW/W row
+    kmap = lambda k2: jnp.where(k2 >= jp, k2 - jp, k2)
+    dw_spec = pl.BlockSpec(
+        (1, bc), lambda i, j, k2, cols, vals: (cols[i, kmap(k2)], j))
+    db_spec = pl.BlockSpec((1, bc), lambda i, j, k2, cols, vals: (0, j))
+    row_spec = lambda width: pl.BlockSpec(
+        (1, width), lambda i, j, k2, cols, vals: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, c // bc, 2 * jp),
+        in_specs=[dw_spec, db_spec, row_spec(rp), row_spec(rp),
+                  row_spec(1), dw_spec, db_spec],
+        out_specs=(dw_spec, db_spec),
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)] * 2,
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_bwd_body, r, rp, b, bp, bc),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((d, c), jnp.float32),
+                   jax.ShapeDtypeStruct((1, c), jnp.float32)),
+        # absolute input indices (scalar-prefetch operands included):
+        # 7/8 are the zero-filled dW/dbias init operands
+        input_output_aliases={7: 0, 8: 1},
+        compiler_params=_SEQUENTIAL3,
+        interpret=interpret,
+    )(colsp, valsp, wp, biasp, yp, lsep, gp,
+      jnp.zeros((d, c), jnp.float32), jnp.zeros((1, c), jnp.float32))
+
+
+def _gather_fwd(cols, vals, w, bias, hashed_labels, num_buckets, block_c,
+                interpret):
+    n, d, r, j = _check_sparse_shapes(cols, vals, w, bias, hashed_labels,
+                                      num_buckets)
+    b = num_buckets
+    bc, rp, bp, jp = choose_gather_blocks(n, d, r, b, j, block_c)
+    colsp, valsp, wp, biasp, yp = _pad_gather_operands(
+        cols, vals, w, bias, hashed_labels, r, b, rp, bp, jp)
+    dims = (n, d, r, rp, b, bp, rp * bp)
+    loss, lse = _gather_call("fwd", colsp, valsp, wp, biasp, yp, None,
+                             None, dims, bc, jp, interpret)
+    return loss[:, 0], (cols, vals, w, bias, hashed_labels, lse)
+
+
+def _gather_bwd(num_buckets, block_c, interpret, res, g):
+    cols, vals, w, bias, hashed_labels, lse = res
+    n, d, r, j = _check_sparse_shapes(cols, vals, w, bias, hashed_labels,
+                                      num_buckets)
+    b = num_buckets
+    bc, rp, bp, jp = choose_gather_blocks(n, d, r, b, j, block_c)
+    colsp, valsp, wp, biasp, yp = _pad_gather_operands(
+        cols, vals, w, bias, hashed_labels, r, b, rp, bp, jp)
+    dims = (n, d, r, rp, b, bp, rp * bp)
+    gp = g.astype(jnp.float32).reshape(n, 1)
+    dwp, dbp = _gather_call("bwd", colsp, valsp, wp, biasp, yp, lse, gp,
+                            dims, bc, jp, interpret)
+    dw = dwp.reshape(d, rp, bp)[:, :r, :b].reshape(d, r * b) \
+        .astype(w.dtype)
+    # features are data: zero cotangent for vals, none for int cols/labels
+    db = (None if bias is None
+          else dbp.reshape(rp, bp)[:r, :b].reshape(r * b)
+          .astype(bias.dtype))
+    return None, jnp.zeros_like(vals), dw, db, None
+
+
+mach_fused_xent_gather_pallas.defvjp(_gather_fwd, _gather_bwd)

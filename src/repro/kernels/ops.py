@@ -20,7 +20,10 @@ from repro.kernels import ref
 from repro.kernels.mach_candidates import (mach_candidate_topk,
                                            mach_candidate_topk_pallas)
 from repro.kernels.mach_decode import mach_decode_pallas
-from repro.kernels.mach_fused_xent import (mach_fused_xent_pallas,
+from repro.kernels.mach_fused_xent import (GATHER_NNZ_THRESHOLD,
+                                           choose_sparse_blocks,
+                                           mach_fused_xent_gather_pallas,
+                                           mach_fused_xent_pallas,
                                            mach_fused_xent_sparse_pallas)
 from repro.kernels.mach_topk import mach_topk_pallas
 from repro.kernels.mach_xent import mach_xent_pallas
@@ -328,6 +331,9 @@ def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
                         block_n: Optional[int] = None,
                         block_c: Optional[int] = None,
                         block_d: Optional[int] = None,
+                        sparse_impl: Optional[str] = None,
+                        bucket_select: Optional[tuple] = None,
+                        bucket_proxy: Optional[jnp.ndarray] = None,
                         use_pallas: Optional[bool] = None,
                         interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sparse-feature fused projection + R-head CE (the ODP d=422k
@@ -343,18 +349,46 @@ def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
 
     On the Pallas path neither the (N, R·B) logits tensor nor a dense
     (N, d) activation ever exists in HBM in either pass — the batch is
-    re-laid-out as padded ELL (O(N·nnz_max)), activation slices are
-    densified per tile in VMEM, and the VJP scatter-adds dW (and
-    reduces dbias) without a logits round-trip.  The fallback is the
+    re-laid-out as padded ELL (O(N·nnz_max)), and the VJP scatter-adds
+    dW (and reduces dbias) without a logits round-trip.  ``sparse_impl``
+    picks the kernel family: ``"densify"`` (per-tile one-hot
+    densification — the low-nnz fast path), ``"gather"`` (scalar-
+    prefetch DMA of the active W rows — per-step VMEM independent of
+    nnz, the only viable family at bag-of-words nnz), or ``None``
+    (auto: gather at nnz_max >= GATHER_NNZ_THRESHOLD or whenever the
+    densify chooser cannot fit the VMEM budget).  The fallback is the
     densifying reference — the right CPU algorithm, and the parity
-    oracle.  Differentiable wrt w and bias; ``values`` gets a ZERO
-    cotangent on the kernel path (features are data — use the
-    reference if you need feature grads).
+    oracle for both families.  Differentiable wrt w and bias;
+    ``values`` gets a ZERO cotangent on the kernel path (features are
+    data — use the reference if you need feature grads).
+
+    ``bucket_select=(c_sel, refresh_every)`` routes through dynamic
+    bucket selection (see ``mach_fused_xent``): the loss runs over the
+    top-``c_sel`` proxy-scored bucket columns per repetition with the
+    batch's label buckets force-included.  ``bucket_proxy`` optionally
+    supplies cached (R, B) proxy scores (the trainer recomputes them
+    every ``refresh_every`` steps); otherwise they are computed in-graph
+    from the batch mean activation (a scatter-add — never a densified
+    batch).
     """
     d = w.shape[0]
     r = hashed_labels.shape[-1]
     if w.shape != (d, r * num_buckets):
         raise ValueError(f"w {w.shape} != ({d}, {r}*{num_buckets})")
+    if bucket_select is not None:
+        c_sel = bucket_select[0]
+        if c_sel < num_buckets:
+            proxy = bucket_proxy if bucket_proxy is not None else \
+                mach_bucket_proxy(w=w, num_buckets=num_buckets, bias=bias,
+                                  csr=(indptr, indices, values))
+            selected = mach_select_buckets(
+                proxy, hashed_labels, num_buckets=num_buckets, c_sel=c_sel)
+            return mach_fused_xent_csr_selected(
+                indptr, indices, values, w, hashed_labels, selected,
+                num_buckets=num_buckets, nnz_max=nnz_max, bias=bias,
+                block_n=block_n, block_c=block_c, block_d=block_d,
+                sparse_impl=sparse_impl, use_pallas=use_pallas,
+                interpret=interpret)
     use = _on_tpu() if use_pallas is None else use_pallas
     if not use:
         # stop_gradient matches the kernel path's zero cotangent for
@@ -365,6 +399,25 @@ def mach_fused_xent_csr(indptr: jnp.ndarray, indices: jnp.ndarray,
             hashed_labels.astype(jnp.int32), num_buckets, bias=bias)
     cols, vals = csr_to_ell(indptr, indices, values, nnz_max, d)
     interp = (not _on_tpu()) if interpret is None else interpret
+    impl = sparse_impl
+    if impl is None:
+        if nnz_max >= GATHER_NNZ_THRESHOLD:
+            impl = "gather"
+        else:
+            try:
+                choose_sparse_blocks(indptr.shape[0] - 1, d, r,
+                                     num_buckets, nnz_max, block_n,
+                                     block_c, block_d)
+                impl = "densify"
+            except ValueError:
+                impl = "gather"
+    if impl == "gather":
+        return mach_fused_xent_gather_pallas(
+            cols, vals, w, bias, hashed_labels.astype(jnp.int32),
+            num_buckets, block_c, interp)
+    if impl != "densify":
+        raise ValueError(f"sparse_impl must be 'densify', 'gather' or "
+                         f"None, got {sparse_impl!r}")
     return mach_fused_xent_sparse_pallas(
         cols, vals, w, bias, hashed_labels.astype(jnp.int32),
         num_buckets, block_n, block_c, block_d, interp)
@@ -377,6 +430,8 @@ def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
                     block_n: Optional[int] = None,
                     block_c: Optional[int] = None,
                     block_d: Optional[int] = None,
+                    bucket_select: Optional[tuple] = None,
+                    bucket_proxy: Optional[jnp.ndarray] = None,
                     use_pallas: Optional[bool] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Logit-free fused projection + R-head CE (training fast path).
@@ -394,10 +449,37 @@ def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
     VMEM independent of d); the fallback is the materializing reference
     — the right CPU algorithm, and the parity oracle.  Differentiable
     wrt h, w and bias (custom VJP with recomputing backward kernels).
+
+    ``bucket_select=(c_sel, refresh_every)`` enables dynamic bucket
+    selection (arxiv 1801.01687's dynamic class selection, hashed to
+    MACH buckets): a cheap proxy scores all R·B bucket columns, the
+    top-``c_sel`` per repetition are kept — the batch's label buckets
+    force-included, so the positive CE term is exact and the bias is
+    one-sided and bounded (``ref.mach_selected_bias_bound_ref``) — and
+    the fused loss runs over the selected C-subset, cutting the
+    kernel's C-axis ``num_buckets/c_sel``-fold.  ``bucket_proxy``
+    optionally supplies cached (R, B) proxy scores; ``refresh_every``
+    is the producer-side cadence for that cache (``train.Trainer``
+    honors it) — selection itself is recomputed every call, so label
+    force-inclusion always reflects the current batch.  With
+    ``bucket_select=None`` this is bit-identical to the unselected
+    path.
     """
     lead = h.shape[:-1]
     d = h.shape[-1]
     r = hashed_labels.shape[-1]
+    if bucket_select is not None:
+        c_sel = bucket_select[0]
+        if c_sel < num_buckets:
+            proxy = bucket_proxy if bucket_proxy is not None else \
+                mach_bucket_proxy(h, w, num_buckets=num_buckets, bias=bias)
+            selected = mach_select_buckets(
+                proxy, hashed_labels, num_buckets=num_buckets, c_sel=c_sel)
+            return mach_fused_xent_selected(
+                h, w, hashed_labels, selected, num_buckets=num_buckets,
+                bias=bias, block_n=block_n, block_c=block_c,
+                block_d=block_d, use_pallas=use_pallas,
+                interpret=interpret)
     h2 = h.reshape((-1, d))
     lbl = hashed_labels.reshape((-1, r)).astype(jnp.int32)
     use = _on_tpu() if use_pallas is None else use_pallas
@@ -408,6 +490,126 @@ def mach_fused_xent(h: jnp.ndarray, w: jnp.ndarray,
     else:
         out = ref.mach_fused_xent_ref(h2, w, lbl, num_buckets, bias=bias)
     return out.reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic bucket selection (training-time C-axis cut)
+# ---------------------------------------------------------------------------
+
+def mach_bucket_proxy(h: Optional[jnp.ndarray] = None,
+                      w: Optional[jnp.ndarray] = None,
+                      *, num_buckets: int,
+                      bias: Optional[jnp.ndarray] = None,
+                      csr: Optional[tuple] = None) -> jnp.ndarray:
+    """Cheap (R, B) bucket proxy scores: the logits of the batch-mean
+    activation.  Dense: ``h (..., d)``; sparse: pass
+    ``csr=(indptr, indices, values)`` instead of ``h`` (the mean is a
+    scatter-add — no densified batch).  One d·R·B matvec, 1/N of the
+    full projection, and cacheable across steps — ``ref.py`` holds the
+    math (pure jnp on every backend); gradients are stopped (the proxy
+    only *ranks* buckets; it must not add a loss term)."""
+    if csr is not None:
+        out = ref.mach_bucket_proxy_csr_ref(*csr, w, num_buckets,
+                                            bias=bias)
+    else:
+        out = ref.mach_bucket_proxy_ref(h.reshape((-1, h.shape[-1])), w,
+                                        num_buckets, bias=bias)
+    return jax.lax.stop_gradient(out)
+
+
+def mach_select_buckets(proxy_scores: jnp.ndarray,
+                        hashed_labels: jnp.ndarray,
+                        *, num_buckets: int, c_sel: int) -> jnp.ndarray:
+    """Top-``c_sel`` bucket columns per repetition by proxy score with
+    the batch's label buckets force-included -> (R, c_sel) int32,
+    sorted ascending.  Pure jnp on every backend (a (R, B) top_k —
+    negligible next to the loss); ``ref.py`` holds the math."""
+    lbl = hashed_labels.reshape((-1, hashed_labels.shape[-1]))
+    return ref.mach_select_buckets_ref(proxy_scores,
+                                       lbl.astype(jnp.int32),
+                                       num_buckets, c_sel)
+
+
+def _apply_bucket_selection(w, bias, lbl, selected, num_buckets):
+    """Gather the selected W/bias columns and remap labels to their
+    position inside the selection.  The gather is indexing (an axis-1
+    gather of whole (d,) column slices — one gather op, not a
+    per-repetition ``take_along_axis`` over the minor axis), so the
+    VJP scatter-adds dW back into the selected columns and every
+    unselected column receives exactly zero gradient.  Gather and
+    scatter are O(d·R·c_sel) *per step*, independent of the batch,
+    while the fused-loss saving is per example — selection pays off
+    once N amortizes the column traffic (any realistic batch)."""
+    r, c_sel = selected.shape
+    d = w.shape[0]
+    flat = (jnp.arange(r, dtype=selected.dtype)[:, None] * num_buckets
+            + selected).reshape(-1)                      # (R·c_sel,)
+    wsel = w[:, flat]
+    bsel = None if bias is None else bias[flat]
+    pos = jnp.argmax(selected[None, :, :] == lbl[:, :, None],
+                     axis=-1).astype(jnp.int32)
+    return wsel, bsel, pos
+
+
+def mach_fused_xent_selected(h: jnp.ndarray, w: jnp.ndarray,
+                             hashed_labels: jnp.ndarray,
+                             selected: jnp.ndarray,
+                             *, num_buckets: int,
+                             bias: Optional[jnp.ndarray] = None,
+                             block_n: Optional[int] = None,
+                             block_c: Optional[int] = None,
+                             block_d: Optional[int] = None,
+                             use_pallas: Optional[bool] = None,
+                             interpret: Optional[bool] = None
+                             ) -> jnp.ndarray:
+    """Fused projection+CE over a selected bucket subset.
+
+    ``selected`` (R, c_sel) int32 — from ``mach_select_buckets``, which
+    force-includes every label bucket (required: a label outside its
+    head's selection would silently remap to position 0).  The W/bias
+    columns are gathered and the ordinary fused op runs at B′ = c_sel,
+    so the kernel C-axis shrinks ``num_buckets/c_sel``-fold; unselected
+    W columns get exactly zero gradient (take_along_axis VJP).  The
+    loss is a lower bound on the full loss: exact positive term,
+    logsumexp over a subset — one-sided bias, bounded per example by
+    ``ref.mach_selected_bias_bound_ref``."""
+    r, c_sel = selected.shape
+    lbl = hashed_labels.reshape((-1, r)).astype(jnp.int32)
+    wsel, bsel, pos = _apply_bucket_selection(w, bias, lbl, selected,
+                                              num_buckets)
+    return mach_fused_xent(
+        h, wsel, pos.reshape(hashed_labels.shape), num_buckets=c_sel,
+        bias=bsel, block_n=block_n, block_c=block_c, block_d=block_d,
+        use_pallas=use_pallas, interpret=interpret)
+
+
+def mach_fused_xent_csr_selected(indptr: jnp.ndarray,
+                                 indices: jnp.ndarray,
+                                 values: jnp.ndarray, w: jnp.ndarray,
+                                 hashed_labels: jnp.ndarray,
+                                 selected: jnp.ndarray,
+                                 *, num_buckets: int, nnz_max: int,
+                                 bias: Optional[jnp.ndarray] = None,
+                                 block_n: Optional[int] = None,
+                                 block_c: Optional[int] = None,
+                                 block_d: Optional[int] = None,
+                                 sparse_impl: Optional[str] = None,
+                                 use_pallas: Optional[bool] = None,
+                                 interpret: Optional[bool] = None
+                                 ) -> jnp.ndarray:
+    """CSR counterpart of ``mach_fused_xent_selected`` — gathers the
+    selected W/bias columns and runs ``mach_fused_xent_csr`` at
+    B′ = c_sel (same one-sided, bounded bias; same zero gradient on
+    unselected columns)."""
+    r, c_sel = selected.shape
+    lbl = hashed_labels.reshape((-1, r)).astype(jnp.int32)
+    wsel, bsel, pos = _apply_bucket_selection(w, bias, lbl, selected,
+                                              num_buckets)
+    return mach_fused_xent_csr(
+        indptr, indices, values, wsel, pos, num_buckets=c_sel,
+        nnz_max=nnz_max, bias=bsel, block_n=block_n, block_c=block_c,
+        block_d=block_d, sparse_impl=sparse_impl, use_pallas=use_pallas,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -457,6 +659,10 @@ ORACLES: dict = {
     "mach_xent": "mach_xent_ref",
     "mach_fused_xent": "mach_fused_xent_ref",
     "mach_fused_xent_csr": "mach_fused_xent_csr_ref",
+    "mach_bucket_proxy": "mach_bucket_proxy_ref",
+    "mach_select_buckets": "mach_select_buckets_ref",
+    "mach_fused_xent_selected": "mach_fused_xent_selected_ref",
+    "mach_fused_xent_csr_selected": "mach_fused_xent_csr_selected_ref",
     "csr_to_ell": "csr_densify_ref",
     "lru_scan": "lru_scan_ref",
     "flash_attention": "flash_attention_ref",

@@ -178,6 +178,145 @@ def mach_fused_xent_csr_ref(indptr: jnp.ndarray, indices: jnp.ndarray,
                                bias=bias)
 
 
+# ---------------------------------------------------------------------------
+# Dynamic bucket selection (training-time C-axis cut; arxiv 1801.01687's
+# dynamic class selection, hashed to MACH buckets).
+# ---------------------------------------------------------------------------
+
+def mach_bucket_proxy_ref(h2: jnp.ndarray, w: jnp.ndarray,
+                          num_buckets: int,
+                          bias: jnp.ndarray = None) -> jnp.ndarray:
+    """Cheap per-repetition bucket proxy scores from a dense batch:
+    the logits of the batch-mean activation, ``mean_n(h) @ W + bias``,
+    reshaped (R, B).  One d·R·B matvec — 1/N of the full projection —
+    and reusable across steps (the trainer refreshes it every
+    ``refresh_every`` steps), so its amortized cost is negligible."""
+    c = w.shape[1]
+    scores = jnp.dot(jnp.mean(h2.astype(jnp.float32), axis=0),
+                     w.astype(jnp.float32))
+    if bias is not None:
+        scores = scores + bias.astype(jnp.float32)
+    return scores.reshape(c // num_buckets, num_buckets)
+
+
+def mach_bucket_proxy_csr_ref(indptr: jnp.ndarray, indices: jnp.ndarray,
+                              values: jnp.ndarray, w: jnp.ndarray,
+                              num_buckets: int,
+                              bias: jnp.ndarray = None) -> jnp.ndarray:
+    """CSR counterpart of ``mach_bucket_proxy_ref``: the batch-mean
+    activation is a scatter-add of values/N — no densified (N, d)
+    batch, cost O(nnz + d·R·B)."""
+    n = indptr.shape[0] - 1
+    xbar = jnp.zeros((w.shape[0],), jnp.float32) \
+        .at[indices].add(values.astype(jnp.float32)) / jnp.maximum(n, 1)
+    c = w.shape[1]
+    scores = jnp.dot(xbar, w.astype(jnp.float32))
+    if bias is not None:
+        scores = scores + bias.astype(jnp.float32)
+    return scores.reshape(c // num_buckets, num_buckets)
+
+
+def mach_select_buckets_ref(proxy_scores: jnp.ndarray,
+                            hashed_labels: jnp.ndarray,
+                            num_buckets: int, c_sel: int) -> jnp.ndarray:
+    """Top-``c_sel`` bucket columns per repetition by proxy score, with
+    every bucket hit by a batch label force-included.
+
+    proxy_scores (R, B) f32; hashed_labels (N, R) int32 -> selected
+    (R, c_sel) int32, sorted ascending per row.  Force-inclusion makes
+    the positive CE term exact (the label's logit is always in the
+    selected set), so the selection bias is one-sided: it can only
+    shrink the logsumexp.  Exact whenever a repetition's distinct label
+    buckets number <= c_sel (with c_sel >= N that always holds); among
+    the forced buckets and among the rest, proxy order breaks ties."""
+    r, b = proxy_scores.shape
+    if not 1 <= c_sel <= b:
+        raise ValueError(f"need 1 <= c_sel <= num_buckets, got "
+                         f"c_sel={c_sel}, num_buckets={b}")
+    proxy = proxy_scores.astype(jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(r)[None, :], hashed_labels.shape)
+    present = jnp.zeros((r, b), jnp.float32) \
+        .at[rows, hashed_labels.astype(jnp.int32)].max(1.0)
+    # a finite boost > the proxy span lifts every label bucket above
+    # every unforced one while preserving proxy order within each group
+    span = jnp.max(proxy) - jnp.min(proxy) + 1.0
+    _, idx = jax.lax.top_k(proxy + present * span, c_sel)
+    return jnp.sort(idx.astype(jnp.int32), axis=-1)
+
+
+def mach_fused_xent_selected_ref(h2: jnp.ndarray, w: jnp.ndarray,
+                                 hashed_labels: jnp.ndarray,
+                                 selected: jnp.ndarray,
+                                 num_buckets: int,
+                                 bias: jnp.ndarray = None) -> jnp.ndarray:
+    """Materializing oracle for the selected-bucket fused loss: form
+    the full (N, R, B) logits, gather the selected columns per head,
+    remap each label to its position inside the selection, reduce with
+    ``mach_xent_ref``.  Requires every label bucket to be selected
+    (``mach_select_buckets_ref`` force-includes them) — a missing label
+    would silently alias to position 0."""
+    n = h2.shape[0]
+    r = hashed_labels.shape[-1]
+    logits = jnp.dot(h2.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)[None, :]
+    logits3 = logits.reshape(n, r, num_buckets)
+    sel = jnp.take_along_axis(logits3, selected[None, :, :], axis=2)
+    pos = jnp.argmax(selected[None, :, :]
+                     == hashed_labels[:, :, None].astype(jnp.int32),
+                     axis=-1).astype(jnp.int32)
+    return mach_xent_ref(sel, pos)
+
+
+def mach_fused_xent_csr_selected_ref(indptr: jnp.ndarray,
+                                     indices: jnp.ndarray,
+                                     values: jnp.ndarray, w: jnp.ndarray,
+                                     hashed_labels: jnp.ndarray,
+                                     selected: jnp.ndarray,
+                                     num_buckets: int,
+                                     bias: jnp.ndarray = None
+                                     ) -> jnp.ndarray:
+    """CSR oracle for the selected-bucket fused loss: densify, then
+    ``mach_fused_xent_selected_ref``."""
+    x = csr_densify_ref(indptr, indices, values.astype(jnp.float32),
+                        w.shape[0])
+    return mach_fused_xent_selected_ref(x, w, hashed_labels, selected,
+                                        num_buckets, bias=bias)
+
+
+def mach_selected_bias_bound_ref(h2: jnp.ndarray, w: jnp.ndarray,
+                                 hashed_labels: jnp.ndarray,
+                                 selected: jnp.ndarray,
+                                 num_buckets: int,
+                                 bias: jnp.ndarray = None) -> jnp.ndarray:
+    """Per-example upper bound on the (one-sided) selection bias.
+
+    With the label bucket always selected, ``full_loss − sel_loss =
+    Σ_r (lse_full − lse_sel)`` and each head's gap lies in ``[0,
+    log1p((B − c_sel)·exp(m_exc − lse_sel))]`` where ``m_exc`` is that
+    head's largest *excluded* logit — the bound this returns, (N,) f32.
+    A-priori: when the selection contains each example's per-head
+    top-c_sel logits, ``m_exc <= lse_sel`` and the gap is at most
+    ``R·log(B/c_sel)`` per example; it shrinks as the proxy gets
+    better.  Materializes the full logits — a test/benchmark helper,
+    not a production path."""
+    n = h2.shape[0]
+    r = hashed_labels.shape[-1]
+    b = num_buckets
+    c_sel = selected.shape[-1]
+    logits = jnp.dot(h2.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)[None, :]
+    logits3 = logits.reshape(n, r, b)
+    sel_logits = jnp.take_along_axis(logits3, selected[None, :, :], axis=2)
+    lse_sel = jax.nn.logsumexp(sel_logits, axis=-1)           # (N, R)
+    rows = jnp.broadcast_to(jnp.arange(r)[:, None], selected.shape)
+    sel_mask = jnp.zeros((r, b), bool).at[rows, selected].set(True)
+    m_exc = jnp.max(jnp.where(sel_mask[None], -jnp.inf, logits3), axis=-1)
+    gap = jnp.log1p((b - c_sel) * jnp.exp(m_exc - lse_sel))
+    return jnp.sum(jnp.where(jnp.isfinite(m_exc), gap, 0.0), axis=-1)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True, window=None):
     """Materializing attention oracle for ``ops.flash_attention`` — the
     exact jnp computation (scores in HBM) the Pallas kernel avoids."""

@@ -176,8 +176,15 @@ class LanguageModel:
                 hc = constrain(h, ("batch", None, None))
                 wk = constrain(params["mach_head"]["kernel"],
                                ("embed", "mach_rb"))
+                # dynamic bucket selection: cfg.mach_bucket_select =
+                # (c_sel, refresh_every) cuts the kernel C-axis to
+                # R·c_sel; the trainer caches (R, B) proxy scores in
+                # batch["bucket_proxy"] every refresh_every steps —
+                # absent, the proxy is recomputed in-graph each step.
                 per_tok = ops.mach_fused_xent(
-                    hc, wk, hashed, num_buckets=cfg.mach.num_buckets)
+                    hc, wk, hashed, num_buckets=cfg.mach.num_buckets,
+                    bucket_select=cfg.mach_bucket_select,
+                    bucket_proxy=batch.get("bucket_proxy"))
             else:
                 logits = self.mach_logits(params, h)        # (B, T, R, Bk)
                 per_tok = ops.mach_xent(logits, hashed)      # (B, T)

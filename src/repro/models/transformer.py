@@ -80,6 +80,15 @@ class ModelConfig:
     mach_fused_loss: bool = False    # train via the logit-free fused
                                      # projection+CE kernel (activation
                                      # memory O(N·d), not O(N·R·B))
+    mach_bucket_select: Optional[tuple] = None
+                                     # (c_sel, refresh_every): dynamic
+                                     # bucket selection on the fused
+                                     # loss — top-c_sel proxy-scored
+                                     # buckets per repetition, labels
+                                     # force-included (one-sided,
+                                     # bounded bias); the trainer
+                                     # refreshes the cached proxy every
+                                     # refresh_every steps
     tie_embeddings: bool = False
     logit_softcap: float = 0.0
     embed_scale: float = 1.0         # gemma-family: sqrt(d_model)

@@ -81,12 +81,35 @@ class Trainer:
     path is launch/train.py which jits the same step under a mesh."""
 
     def __init__(self, model, tcfg: TrainConfig,
-                 loss_fn: Optional[Callable] = None):
+                 loss_fn: Optional[Callable] = None,
+                 bucket_proxy_fn: Optional[Callable] = None):
         self.model = model
         self.tcfg = tcfg
         self.loss_fn = loss_fn or model.loss
         self.step_fn, self.opt = make_train_step(self.loss_fn, tcfg)
         self._jit_step = jax.jit(self.step_fn, donate_argnums=(0,))
+        # Dynamic bucket selection: ``bucket_proxy_fn(params, batch)``
+        # -> (R, B) proxy scores, recomputed every ``refresh_every``
+        # steps (cfg.mach_bucket_select = (c_sel, refresh_every)) and
+        # injected as batch["bucket_proxy"].  Without it the model's
+        # loss recomputes the proxy in-graph each step — same math,
+        # no cross-step caching.
+        self.bucket_proxy_fn = bucket_proxy_fn
+        sel = getattr(getattr(model, "cfg", None),
+                      "mach_bucket_select", None)
+        self._proxy_every = sel[1] if sel is not None and len(sel) > 1 else 1
+        self._proxy = None
+
+    def _with_bucket_proxy(self, state: TrainState, batch, step: int):
+        """Refresh the cached bucket-proxy scores on schedule and hand
+        them to the loss.  Selection itself is recomputed in-graph with
+        the current batch's label buckets force-included, so a stale
+        proxy only affects which *negative* buckets the loss sees."""
+        if self.bucket_proxy_fn is None or not isinstance(batch, dict):
+            return batch
+        if self._proxy is None or step % max(self._proxy_every, 1) == 0:
+            self._proxy = self.bucket_proxy_fn(state.params, batch)
+        return {**batch, "bucket_proxy": self._proxy}
 
     def init_state(self, key) -> TrainState:
         params, _ = self.model.init(key)
@@ -97,7 +120,7 @@ class Trainer:
         start = int(state.step)
         for s in range(start, start + num_steps):
             t0 = time.perf_counter()
-            batch = stream.batch_at(s)
+            batch = self._with_bucket_proxy(state, stream.batch_at(s), s)
             state, metrics = self._jit_step(state, batch)
             if monitor is not None:
                 jax.block_until_ready(state.params)

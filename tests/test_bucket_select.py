@@ -1,0 +1,298 @@
+"""Dynamic bucket selection (ISSUE 8): the training-time C-axis cut.
+
+The four claims the feature stands on:
+
+  * force-inclusion — every example's label bucket is inside its
+    repetition's selection, whatever the proxy scores say, so the
+    positive CE term is exact at every step;
+  * one-sided, bounded bias — ``full_loss − selected_loss`` is in
+    ``[0, mach_selected_bias_bound_ref]`` per example (the selected
+    logsumexp runs over a subset that contains the label);
+  * zero gradient on unselected W/bias columns — selection is a
+    gather, so its VJP scatters dW back only into selected columns;
+  * ``bucket_select=None`` (or c_sel = B) is bit-identical to the
+    unselected path — the knob is free when off.
+
+Plus the plumbing: cached-proxy == in-graph-proxy, CSR == dense ==
+oracle, the kernel path composes with selection, model.loss threads
+``ModelConfig.mach_bucket_select``, and ``train.Trainer`` refreshes the
+proxy cache on the ``refresh_every`` cadence.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mach import MACHConfig, MACHLinear, MACHOutputHead
+from repro.kernels import ops, ref
+from repro.models import LanguageModel, ModelConfig
+
+
+def _sel_case(n=12, d=32, r=4, b=64, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed), 4)
+    h = jax.random.normal(k1, (n, d)) / np.sqrt(d)
+    w = jax.random.normal(k2, (d, r * b)) / np.sqrt(d)
+    bias = jax.random.normal(k3, (r * b,)) * 0.1
+    y = jax.random.randint(k4, (n, r), 0, b)
+    return h, w, bias, y
+
+
+def _proxy(h, w, bias, b):
+    return ops.mach_bucket_proxy(h, w, num_buckets=b, bias=bias)
+
+
+# ---------------------------------------------------------------------------
+# the four core claims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c_sel", [4, 16, 63])
+def test_select_buckets_force_includes_labels(c_sel):
+    """Every label bucket of the batch lands in its repetition's
+    selection — even when the proxy actively down-ranks it.
+    (Force-inclusion needs the batch's distinct label buckets per
+    repetition to fit in c_sel, so small c_sel draws labels from a
+    c_sel-sized bucket pool — an arbitrary one, per repetition.)"""
+    n, d, r, b = 12, 32, 4, 64
+    h, w, bias, y = _sel_case(n, d, r, b)
+    if c_sel < n:
+        pools = jnp.stack([jax.random.permutation(
+            jax.random.key(10 + rr), b)[:c_sel] for rr in range(r)])
+        y = pools[jnp.arange(r)[None, :], y % c_sel]
+    proxy = _proxy(h, w, bias, b)
+    # adversarial proxy: label buckets pushed to the bottom
+    rows = jnp.broadcast_to(jnp.arange(r), (n, r))
+    hostile = proxy.at[rows, y].add(-1e6)
+    for p in (proxy, hostile):
+        sel = ops.mach_select_buckets(p, y, num_buckets=b, c_sel=c_sel)
+        assert sel.shape == (r, c_sel) and sel.dtype == jnp.int32
+        sel_np = np.asarray(sel)
+        assert all(np.all(np.diff(row) > 0) for row in sel_np)  # sorted,
+        #                                                         unique
+        for rr in range(r):
+            assert set(np.asarray(y)[:, rr]) <= set(sel_np[rr])
+
+
+def test_selected_bias_one_sided_and_bounded():
+    """0 <= full − selected <= mach_selected_bias_bound_ref, per
+    example; the bound is finite and the gap nonzero (the test would
+    pass vacuously on a degenerate case otherwise)."""
+    n, d, r, b, c_sel = 16, 32, 4, 64, 8
+    h, w, bias, y = _sel_case(n, d, r, b, seed=2)
+    proxy = _proxy(h, w, bias, b)
+    sel = ops.mach_select_buckets(proxy, y, num_buckets=b, c_sel=c_sel)
+    full = ref.mach_fused_xent_ref(h, w, y, b, bias=bias)
+    part = ops.mach_fused_xent_selected(
+        h, w, y, sel, num_buckets=b, bias=bias)
+    bound = ref.mach_selected_bias_bound_ref(h, w, y, sel, b, bias=bias)
+    gap = np.asarray(full - part)
+    assert np.all(gap >= -1e-5)
+    assert np.all(gap <= np.asarray(bound) + 1e-5)
+    assert np.all(np.isfinite(np.asarray(bound)))
+    assert np.max(gap) > 1e-3          # the bias is real at c_sel << B
+
+
+def test_unselected_columns_get_exactly_zero_grad():
+    n, d, r, b, c_sel = 10, 24, 3, 32, 6
+    h, w, bias, y = _sel_case(n, d, r, b, seed=3)
+    proxy = _proxy(h, w, bias, b)
+    sel = ops.mach_select_buckets(proxy, y, num_buckets=b, c_sel=c_sel)
+
+    dw, dbias = jax.grad(lambda w_, b_: jnp.sum(
+        ops.mach_fused_xent_selected(h, w_, y, sel, num_buckets=b,
+                                     bias=b_)),
+        argnums=(0, 1))(w, bias)
+    mask = np.zeros((r, b), bool)
+    mask[np.arange(r)[:, None], np.asarray(sel)] = True
+    dw3 = np.asarray(dw).reshape(d, r, b)
+    db2 = np.asarray(dbias).reshape(r, b)
+    assert np.all(dw3[:, ~mask] == 0.0)
+    assert np.all(db2[~mask] == 0.0)
+    # and the selected columns actually learn
+    assert np.all(np.any(dw3[:, mask] != 0.0, axis=0))
+
+
+def test_bucket_select_none_and_full_are_bit_identical():
+    """The knob off (None) or vacuous (c_sel = B) takes the exact same
+    path as no knob at all — bitwise, values and grads."""
+    n, d, r, b = 9, 24, 3, 16
+    h, w, bias, y = _sel_case(n, d, r, b, seed=4)
+
+    def vag(**kw):
+        return jax.value_and_grad(lambda w_: jnp.sum(ops.mach_fused_xent(
+            h, w_, y, num_buckets=b, bias=bias, **kw)))(w)
+
+    l0, g0 = vag()
+    for kw in ({"bucket_select": None},
+               {"bucket_select": (b, 1)},
+               {"bucket_select": (2 * b, 1)}):
+        l1, g1 = vag(**kw)
+        assert np.asarray(l0).tobytes() == np.asarray(l1).tobytes()
+        assert np.asarray(g0).tobytes() == np.asarray(g1).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# plumbing: proxy cache, CSR/dense/oracle parity, kernel composition
+# ---------------------------------------------------------------------------
+
+def test_cached_proxy_matches_in_graph_proxy():
+    """bucket_proxy=<precomputed> is exactly the in-graph recompute
+    (same batch), and the kwarg path equals the explicit selected op."""
+    n, d, r, b, c_sel = 11, 24, 3, 32, 8
+    h, w, bias, y = _sel_case(n, d, r, b, seed=5)
+    proxy = _proxy(h, w, bias, b)
+    via_kwarg = ops.mach_fused_xent(h, w, y, num_buckets=b, bias=bias,
+                                    bucket_select=(c_sel, 7))
+    via_cache = ops.mach_fused_xent(h, w, y, num_buckets=b, bias=bias,
+                                    bucket_select=(c_sel, 7),
+                                    bucket_proxy=proxy)
+    sel = ops.mach_select_buckets(proxy, y, num_buckets=b, c_sel=c_sel)
+    explicit = ops.mach_fused_xent_selected(h, w, y, sel, num_buckets=b,
+                                            bias=bias)
+    np.testing.assert_array_equal(np.asarray(via_kwarg),
+                                  np.asarray(via_cache))
+    np.testing.assert_array_equal(np.asarray(via_cache),
+                                  np.asarray(explicit))
+
+
+def test_csr_selected_matches_dense_and_oracle():
+    from benchmarks.common import make_csr_case
+    n, d, r, b, nnz, c_sel = 9, 48, 4, 32, 8, 8
+    indptr, indices, values, w, bias, y, _ = make_csr_case(n, d, r, b,
+                                                           nnz)
+    proxy = ops.mach_bucket_proxy(w=w, num_buckets=b, bias=bias,
+                                  csr=(indptr, indices, values))
+    sel = ops.mach_select_buckets(proxy, y, num_buckets=b, c_sel=c_sel)
+    out = ops.mach_fused_xent_csr_selected(
+        indptr, indices, values, w, y, sel, num_buckets=b, nnz_max=nnz,
+        bias=bias)
+    oracle = ref.mach_fused_xent_csr_selected_ref(
+        indptr, indices, values, w, y, sel, b, bias=bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+    dense = ops.mach_fused_xent_selected(
+        ref.csr_densify_ref(indptr, indices, values, d), w, y, sel,
+        num_buckets=b, bias=bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_selected_composes_with_kernel_path():
+    """Selection is a pre-transform: the fused Pallas kernel runs at
+    B' = c_sel and matches the selected oracle (values + dW)."""
+    n, d, r, b, c_sel = 8, 32, 3, 64, 16
+    h, w, bias, y = _sel_case(n, d, r, b, seed=6)
+    proxy = _proxy(h, w, bias, b)
+    sel = ops.mach_select_buckets(proxy, y, num_buckets=b, c_sel=c_sel)
+
+    def loss(w_, use_pallas, interpret):
+        return jnp.sum(ops.mach_fused_xent_selected(
+            h, w_, y, sel, num_buckets=b, bias=bias,
+            use_pallas=use_pallas, interpret=interpret))
+
+    lr, dr = jax.value_and_grad(lambda w_: loss(w_, False, None))(w)
+    lk, dk = jax.value_and_grad(lambda w_: loss(w_, True, True))(w)
+    np.testing.assert_allclose(float(lr), float(lk), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(dk),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_head_fused_loss_threads_bucket_select():
+    """MACHLinear and MACHOutputHead thread the knob; the selected head
+    loss is a lower bound on the full head loss."""
+    cfg = MACHConfig(500, 32, 4)
+    lin = MACHLinear(cfg, 16, fused=True)
+    params = lin.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (10, 16))
+    y = jax.random.randint(jax.random.key(2), (10,), 0, 500)
+    full = lin.fused_loss(params, x, y)
+    proxy = lin.bucket_proxy_scores(params, x)
+    assert proxy.shape == (4, 32)
+    part = lin.fused_loss(params, x, y, bucket_select=(8, 3),
+                          bucket_proxy=proxy)
+    assert float(part) <= float(full) + 1e-6
+
+    head = MACHOutputHead(cfg, 16)
+    hp = head.init(jax.random.key(3))
+    h = jax.random.normal(jax.random.key(4), (6, 3, 16))
+    hy = jax.random.randint(jax.random.key(5), (6, 3), 0, 500)
+    hfull = head.fused_loss(hp, h, hy)
+    hpart = head.fused_loss(hp, h, hy, bucket_select=(8, 3),
+                            bucket_proxy=head.bucket_proxy_scores(hp, h))
+    assert float(hpart) <= float(hfull) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# model + trainer threading
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    return ModelConfig(name="tiny", num_layers=1, d_model=32, num_heads=2,
+                       num_kv_heads=1, d_ff=64, vocab_size=64,
+                       dtype=jnp.float32, mach=MACHConfig(64, 8, 4),
+                       mach_fused_loss=True, **kw)
+
+
+def test_model_loss_threads_bucket_select():
+    """ModelConfig.mach_bucket_select reaches the fused loss: selected
+    <= full (one-sided), and None keeps bit-parity with the seed path."""
+    cfg = _tiny_cfg()
+    m0 = LanguageModel(cfg)
+    m1 = LanguageModel(dataclasses.replace(cfg, mach_bucket_select=(4, 3)))
+    params, _ = m0.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 9), 0,
+                                          64)}
+    (l0, _), g0 = jax.value_and_grad(m0.loss, has_aux=True)(params, batch)
+    (l1, _), g1 = jax.value_and_grad(m1.loss, has_aux=True)(params, batch)
+    assert float(l1) <= float(l0) + 1e-6
+    # the head kernel grad exists and respects the selection (some
+    # columns exactly zero at c_sel=4 < B=8)
+    gk = np.asarray(g1["mach_head"]["kernel"]).reshape(32, 4, 8)
+    assert np.any(np.all(gk == 0.0, axis=0))
+    # knob off: bit-parity
+    m2 = LanguageModel(dataclasses.replace(cfg, mach_bucket_select=None))
+    (l2, _), g2 = jax.value_and_grad(m2.loss, has_aux=True)(params, batch)
+    assert float(l0) == float(l2)
+    for a, c in zip(jax.tree.leaves(g0), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_trainer_refreshes_proxy_on_cadence():
+    """Trainer honors refresh_every from cfg.mach_bucket_select: the
+    proxy fn runs on steps 0, k, 2k, ... and its output is injected as
+    batch["bucket_proxy"]."""
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = _tiny_cfg(mach_bucket_select=(4, 3))
+    model = LanguageModel(cfg)
+    calls = []
+
+    def proxy_fn(params, batch):
+        calls.append(len(calls))
+        h, _, _ = model.hidden_states(params, batch["tokens"][:, :-1])
+        return ops.mach_bucket_proxy(
+            h.reshape(-1, h.shape[-1]), params["mach_head"]["kernel"],
+            num_buckets=cfg.mach.num_buckets)
+
+    seen = []
+    orig_loss = model.loss
+
+    def spy_loss(params, batch):
+        seen.append("bucket_proxy" in batch)
+        return orig_loss(params, batch)
+
+    class Stream:
+        def batch_at(self, s):
+            return {"tokens": jax.random.randint(jax.random.key(s),
+                                                 (4, 9), 0, 64)}
+
+    tr = Trainer(model, TrainConfig(total_steps=7, warmup_steps=1,
+                                    log_every=100),
+                 loss_fn=spy_loss, bucket_proxy_fn=proxy_fn)
+    state = tr.init_state(jax.random.key(0))
+    state = tr.fit(state, Stream(), 7, log=None)
+    assert len(calls) == 3              # steps 0, 3, 6
+    assert seen and all(seen)           # proxy injected every step
+    assert int(state.step) == 7

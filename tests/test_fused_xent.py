@@ -20,9 +20,13 @@ import pytest
 from repro.core.mach import MACHConfig, MACHOutputHead, mach_loss
 from repro.kernels import ops, ref
 from repro.kernels.mach_fused_xent import (DEFAULT_VMEM_BUDGET,
+                                           GATHER_NNZ_THRESHOLD,
                                            choose_fused_blocks,
+                                           choose_gather_blocks,
                                            choose_sparse_blocks,
                                            dense_tile_bytes,
+                                           gather_tile_bytes,
+                                           mach_fused_xent_gather_pallas,
                                            mach_fused_xent_pallas,
                                            sparse_tile_bytes)
 from repro.models import LanguageModel, ModelConfig
@@ -250,7 +254,8 @@ def test_choose_fused_blocks_respects_budget(d, r, b):
 
 @pytest.mark.parametrize("d,r,b,j", [
     (422_713, 25, 32, 128),    # paper ODP: d=422k bag-of-words
-    (8192, 8, 64, 1024),       # high-nnz regime (scalar-gather TODO)
+    (8192, 8, 64, 1024),       # high-nnz regime (gather-path parity in
+    #                            test_gather_high_nnz_acceptance_case)
     (4096, 20, 512, 64),
     (96, 4, 16, 8),
 ])
@@ -323,6 +328,178 @@ def test_ops_csr_threads_block_overrides(monkeypatch):
                                      bias=bias)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(out),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scalar-prefetch gather family (the high-nnz sparse path)
+# ---------------------------------------------------------------------------
+
+def _ell_case(n, d, r, b, nnz, seed=0):
+    from benchmarks.common import make_csr_case
+    indptr, indices, values, w, bias, y, g = make_csr_case(n, d, r, b,
+                                                           nnz, seed=seed)
+    cols, vals = ops.csr_to_ell(indptr, indices, values, nnz, d)
+    return indptr, indices, values, cols, vals, w, bias, y, g
+
+
+def _gather_vs_ref(indptr, indices, values, cols, vals, w, bias, y, g, b,
+                   block_c=None, rtol=1e-4, atol=1e-5):
+    lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y, b,
+                                     bias=bias)
+    lk = mach_fused_xent_gather_pallas(cols, vals, w, bias, y, b,
+                                       block_c, True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=1e-5, atol=1e-5)
+    sv = jax.lax.stop_gradient(values)     # kernel path: values are data
+    argnums = (0,) if bias is None else (0, 1)
+
+    def ref_loss(w_, b_=None):
+        return jnp.sum(ref.mach_fused_xent_csr_ref(
+            indptr, indices, sv, w_, y, b, bias=b_) * g)
+
+    def ker_loss(w_, b_=None):
+        return jnp.sum(mach_fused_xent_gather_pallas(
+            cols, vals, w_, b_, y, b, block_c, True) * g)
+
+    args = (w,) if bias is None else (w, bias)
+    dr = jax.grad(ref_loss, argnums=argnums)(*args)
+    dk = jax.grad(ker_loss, argnums=argnums)(*args)
+    for name, a, k in zip(("dw", "dbias"), dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=rtol, atol=atol, err_msg=name)
+
+
+@pytest.mark.parametrize("n,d,r,b,nnz", [
+    (9, 96, 4, 32, 6),        # ragged rows, several heads per block
+    (5, 64, 3, 24, 8),        # padded head count
+    (4, 48, 8, 16, 16),       # nnz rows spanning several grid steps
+])
+def test_gather_matches_densifying_ref(n, d, r, b, nnz):
+    """The scalar-prefetch gather kernels against the densifying
+    reference oracle: values + dW + dbias on ragged CSR batches."""
+    case = _ell_case(n, d, r, b, nnz)
+    _gather_vs_ref(*case, b)
+
+
+def test_gather_no_bias_and_sub_lane_block():
+    """No-bias path and a sub-lane column block (bc = 8 < the 128-lane
+    tile) through the gather family."""
+    n, d, r, b, nnz = 7, 64, 3, 16, 8
+    (indptr, indices, values, cols, vals, w, bias, y, g) = _ell_case(
+        n, d, r, b, nnz, seed=5)
+    _gather_vs_ref(indptr, indices, values, cols, vals, w, None, y, g, b)
+    _gather_vs_ref(indptr, indices, values, cols, vals, w, bias, y, g, b,
+                   block_c=8)
+
+
+def test_gather_high_nnz_acceptance_case():
+    """ISSUE 8's promoted high-nnz case: (d=8192, R=8, B=64, nnz=1024)
+    — the bag-of-words regime where the densify family's one-hot tile
+    made the padded-ELL path non-viable — full parity (values + dW +
+    dbias) through the gather kernels.  N=2 because interpret mode
+    carries the full dW array through every grid step (cost ~ N·d per
+    pass); the gather grid axes under test (C/bc, jp) are N-independent.
+    """
+    n, d, r, b, nnz = 2, 8192, 8, 64, 1024
+    (indptr, indices, values, cols, vals, w, bias, y, g) = _ell_case(
+        n, d, r, b, nnz, seed=11)
+    sv = jax.lax.stop_gradient(values)
+
+    lr, dr = jax.value_and_grad(lambda w_, b_: jnp.sum(
+        ref.mach_fused_xent_csr_ref(indptr, indices, sv, w_, y, b,
+                                    bias=b_) * g),
+        argnums=(0, 1))(w, bias)
+    lk, dk = jax.value_and_grad(lambda w_, b_: jnp.sum(
+        mach_fused_xent_gather_pallas(cols, vals, w_, b_, y, b, None,
+                                      True) * g),
+        argnums=(0, 1))(w, bias)
+    np.testing.assert_allclose(float(lr), float(lk), rtol=1e-6, atol=1e-4)
+    for name, a, k in zip(("dw", "dbias"), dr, dk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(k),
+                                   rtol=1e-4, atol=1e-6, err_msg=name)
+
+
+def test_choose_gather_blocks_nnz_and_d_independent():
+    """The gather accounting's whole point: the budget never depends on
+    nnz or d (W streams one gathered row at a time; ELL indices live in
+    SMEM) — the paper-ODP d=422k at nnz from 8 to 100k all fit."""
+    for j in (8, 1024, 100_000):
+        bc, rp, bp, jp = choose_gather_blocks(256, 422_713, 25, 32, j)
+        assert gather_tile_bytes(bc, rp) <= DEFAULT_VMEM_BUDGET
+        assert jp == max(j, 1)
+        assert (rp * bp) % bc == 0 and rp >= 25 and bp >= 32
+
+
+def test_csr_dispatch_routes_by_nnz(monkeypatch):
+    """ops.mach_fused_xent_csr auto-dispatch: nnz_max >=
+    GATHER_NNZ_THRESHOLD routes to the gather family, below it to the
+    densify family; sparse_impl overrides both ways; parity holds on
+    the routed path."""
+    calls = []
+    orig = ops.mach_fused_xent_gather_pallas
+    monkeypatch.setattr(
+        ops, "mach_fused_xent_gather_pallas",
+        lambda *a, **k: (calls.append("gather"), orig(*a, **k))[1])
+
+    n, d, r, b = 3, 64, 4, 16
+    lo = GATHER_NNZ_THRESHOLD // 32
+    hi = GATHER_NNZ_THRESHOLD
+    for nnz, impl, expect in [(lo, None, []),
+                              (lo, "gather", ["gather"]),
+                              (hi, None, ["gather"])]:
+        calls.clear()
+        (indptr, indices, values, _, _, w, bias, y, _) = _ell_case(
+            n, d, r, b, nnz)
+        out = ops.mach_fused_xent_csr(
+            indptr, indices, values, w, y, num_buckets=b, nnz_max=nnz,
+            bias=bias, sparse_impl=impl, use_pallas=True, interpret=True)
+        assert calls == expect, (nnz, impl, calls)
+        lr = ref.mach_fused_xent_csr_ref(indptr, indices, values, w, y,
+                                         b, bias=bias)
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(out),
+                                   rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="sparse_impl"):
+        ops.mach_fused_xent_csr(indptr, indices, values, w, y,
+                                num_buckets=b, nnz_max=hi,
+                                sparse_impl="bogus", use_pallas=True,
+                                interpret=True)
+
+
+def test_no_onehot_tile_in_gather_jaxpr():
+    """ISSUE 8 acceptance: scanning INTO the pallas kernel jaxprs
+    (skip_primitives=()), the gather path has no (bn, jp, bd)-shaped
+    one-hot intermediate — every gather tile is 2D — while the densify
+    path provably has one (the detector works)."""
+    from benchmarks.common import intermediate_avals
+
+    n, d, r, b, nnz = 4, 96, 4, 32, 16
+    (indptr, indices, values, _, _, w, bias, y, g) = _ell_case(
+        n, d, r, b, nnz)
+
+    def vag(impl):
+        def f(w_, b_):
+            return jax.value_and_grad(lambda ww, bb: jnp.sum(
+                ops.mach_fused_xent_csr(
+                    indptr, indices, values, ww, y, num_buckets=b,
+                    nnz_max=nnz, bias=bb, sparse_impl=impl,
+                    use_pallas=True, interpret=True) * g),
+                argnums=(0, 1))(w_, b_)
+        return jax.make_jaxpr(f)(w, bias).jaxpr
+
+    def onehot_tiles(jaxpr):
+        # a (bn, jp, bd) one-hot: nnz-sized middle axis crossed with a
+        # real feature block (bd >= the 8-sublane tile) — benign 3D
+        # reshapes like the (N, jp, 1) ELL widening or the (d, R, B)
+        # W view don't match
+        return [a.shape for a in intermediate_avals(
+            jaxpr, skip_primitives=())
+            if getattr(a, "ndim", 0) == 3
+            and a.shape[1] >= nnz and a.shape[2] >= 8]
+
+    densify_onehot = onehot_tiles(vag("densify"))
+    assert densify_onehot, "detector broken: densify one-hot not seen"
+    gather_onehot = onehot_tiles(vag("gather"))
+    assert not gather_onehot, gather_onehot
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,11 @@ Every public op defined in ``repro.kernels.ops`` must name its pure-jnp
 reference in ``ops.ORACLES``, and every named oracle must exist (and be
 callable) in ``repro.kernels.ref``.  An op added without an oracle — or
 an oracle renamed out from under its op — is a build failure, not a
-review nit.  Run by CI and by tests/test_kernels.py:
+review nit.  Additionally every public ``*_pallas`` entry point in the
+kernels package must be referenced by ops.py — a kernel nobody
+dispatches (e.g. a gather/densify variant orphaned by a refactor) is
+dead weight that silently escapes the parity tests routed through ops.
+Run by CI and by tests/test_kernels.py:
 
     PYTHONPATH=src python tools/lint_kernel_oracles.py
 """
@@ -39,6 +43,41 @@ def check() -> list[str]:
             errors.append(
                 f"oracle ref.{ref_name} (for ops.{op_name}) does not "
                 f"exist in kernels/ref.py or is not callable")
+    errors += _check_orphan_kernels(ops)
+    return errors
+
+
+def _check_orphan_kernels(ops) -> list[str]:
+    """Every public ``*_pallas`` callable in the kernels package must be
+    reachable from the dispatch surface: referenced by ops.py, or called
+    as a stage of another kernel in its own module.  Anything else is
+    dead dispatch surface the ops-routed parity tests can never reach."""
+    import importlib
+    import pkgutil
+    import re
+
+    import repro.kernels as pkg
+
+    errors = []
+    ops_src = inspect.getsource(ops)
+    for info in pkgutil.iter_modules(pkg.__path__):
+        if info.name in ("ops", "ref"):
+            continue
+        mod = importlib.import_module(f"repro.kernels.{info.name}")
+        mod_src = inspect.getsource(mod)
+        for name, fn in vars(mod).items():
+            if not (callable(fn) and not name.startswith("_")
+                    and name.endswith("_pallas")
+                    and getattr(fn, "__module__", None) == mod.__name__):
+                continue
+            called_locally = re.search(
+                rf"(?<!def ){re.escape(name)}\(", mod_src)
+            if name not in ops_src and not called_locally:
+                errors.append(
+                    f"{mod.__name__}.{name} is a public Pallas entry "
+                    f"point that neither ops.py nor its own module "
+                    f"calls — dispatch it from an op (or make it "
+                    f"private)")
     return errors
 
 
